@@ -1,0 +1,34 @@
+"""Append generated §Tables to EXPERIMENTS.md from results/dryrun.json."""
+import json, sys
+sys.path.insert(0, "src")
+from repro.launch.report import (render_dryrun_table, render_roofline_table,
+                                 row_terms, hbm_total_gb)
+
+results = json.load(open("results/dryrun.json"))
+
+out = []
+out.append("\n### Roofline — single pod 16x16 (256 chips), strategy tp+fsdp+sp\n")
+out.append("(memory term excludes Pallas-flash-eliminated attention-quadratic "
+           "traffic; decode rows score bandwidth fraction — see §Roofline)\n")
+out.append(render_roofline_table(results, "pod16x16", "tp+fsdp+sp"))
+out.append("\n\n### Strategy comparison — qwen1.5-0.5b train_4k (§Perf B)\n")
+out.append("| strategy | compute_s | memory_s | collective_s | bound_s | frac | HBM GB |")
+out.append("|---|---|---|---|---|---|---|")
+for strat in ("tp+fsdp+sp", "dp_heavy", "dp_mod"):
+    key = f"qwen1.5-0.5b|train_4k|pod16x16|{strat}"
+    v = results.get(key)
+    if not v or v["status"] != "ok":
+        continue
+    t = row_terms(v)
+    out.append(f"| {strat} | {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+               f"| {t['collective_s']:.3f} | {t['bound_step_s']:.3f} "
+               f"| {t['roofline_fraction']*100:.2f}% | {hbm_total_gb(v):.1f} |")
+out.append("\n\n### Dry-run detail — both meshes, strategy tp+fsdp+sp\n")
+out.append(render_dryrun_table(results, "tp+fsdp+sp"))
+out.append("")
+
+text = open("EXPERIMENTS.md").read()
+marker = "## §Tables (generated)"
+text = text[: text.index(marker) + len(marker)] + "\n" + "\n".join(out)
+open("EXPERIMENTS.md", "w").write(text)
+print("tables appended")

@@ -1,0 +1,74 @@
+"""Paper Figure 14 / Table 6: predicting the scaling limit from METG.
+
+The paper's claim: one full-size run plus the METG curve predicts where
+strong scaling stops (within ~2x in node count, ~1.3x in time).  The
+1-core analogue: strong-scaling a fixed total problem over n virtual
+workers shrinks per-task granularity as work/n; the efficiency-limited
+wall-time floor is METG(50%) x tasks.  We predict the largest useful n
+from (one big run + METG), then measure where the actual curve crosses
+the floor, and report the factor of separation — Table 6's statistic.
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+from repro.backends import get_backend
+from repro.core import compute_metg, make_graph, run_sweep
+
+from .common import Row
+
+TOTAL_ITERS = 16384  # total work per column-task-chain
+HEIGHT = 32
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    be = get_backend("xla-scan")
+
+    def graphs_at(iters):
+        return [make_graph(width=8, height=HEIGHT, pattern="stencil",
+                           kernel="compute", iterations=iters)]
+
+    def make_runner(iters):
+        return be.prepare(graphs_at(iters))
+
+    # METG curve (measured in place, same shape)
+    sweep_sizes = [4096, 1024, 256, 64, 16, 4, 1]
+    pts = run_sweep(make_runner, graphs_at, sweep_sizes, repeats=3)
+    res = compute_metg(pts)
+    metg = res.metg or 0.0
+    num_tasks = 8 * HEIGHT
+
+    # "strong scaling": n virtual workers -> per-task work TOTAL/n
+    ns = [1, 2, 4, 8, 16, 32, 64, 128, 256]
+    actual = {}
+    for n in ns:
+        iters = max(1, TOTAL_ITERS // n)
+        runner = make_runner(iters)
+        runner()
+        import time
+        best = min(
+            (lambda: (lambda t0: (runner(), time.perf_counter() - t0)[1])(
+                time.perf_counter()))()
+            for _ in range(3))
+        actual[n] = best / n  # per-worker wall share (ideal parallel time)
+        rows.append(Row(f"metg_validation.actual.n{n}", best / n * 1e6,
+                        f"iters_per_task={iters}"))
+
+    # prediction: ideal time = t(1)/n; limit floor = METG * tasks / ...
+    t1 = actual[1]
+    floor = metg * num_tasks / 8  # per-column-chain share
+    pred_n = t1 / floor if floor > 0 else float("inf")
+    # measured crossing: first n whose actual per-worker time <= floor*1.0
+    meas_n = None
+    for n in ns:
+        if actual[n] <= floor * 1.05:
+            meas_n = n
+            break
+    meas_n = meas_n or ns[-1]
+    sep = max(pred_n, meas_n) / max(min(pred_n, meas_n), 1e-9)
+    rows.append(Row("metg_validation.summary", metg * 1e6,
+                    f"pred_limit_n={pred_n:.1f};measured_limit_n={meas_n};"
+                    f"separation_factor={sep:.2f}"))
+    return rows

@@ -1,0 +1,69 @@
+"""Framework METG: the paper's metric applied to our own runtime.
+
+Treats one transformer block as the "task" and sweeps model size (layer
+count fixed, per-layer work varied via seq length) measuring the train-step
+dispatch floor — the granularity below which the JAX dispatch overhead
+(python + runtime) eats >50% of the step.  This is the number a user needs
+to pick microbatch sizes on real hardware, and the direct analogue of the
+paper's §V-C question asked of this framework itself.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig, make_batch
+from repro.train import train_step as TS
+
+from .common import Row
+
+ARCHS = ["qwen1.5-0.5b", "mixtral-8x7b", "mamba2-2.7b"]
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for arch in ARCHS:
+        cfg = reduced(get_config(arch))
+        tcfg = TS.TrainConfig(total_steps=100)
+        state, _ = TS.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+        step = TS.jit_train_step(cfg, tcfg)
+        per_layer = []
+        for seq in (16, 64, 256):
+            dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                              global_batch=4,
+                              embed_dim=cfg.d_model if cfg.frontend else 0)
+            batch = make_batch(dcfg, 0)
+            state, m = step(state, batch)  # compile
+            jax.block_until_ready(m["loss"])
+            times = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                state, m = step(state, batch)
+                jax.block_until_ready(m["loss"])
+                times.append(time.perf_counter() - t0)
+            best = min(times)
+            gran = best / cfg.num_layers
+            per_layer.append(gran)
+            rows.append(Row(f"model_step.{arch}.seq{seq}", best * 1e6,
+                            f"per_layer_task_us={gran * 1e6:.1f}"))
+        # dispatch floor: empty jitted step
+        @jax.jit
+        def noop(x):
+            return x + 1
+
+        x = jax.numpy.zeros(())
+        noop(x)
+        t0 = time.perf_counter()
+        for _ in range(100):
+            x = noop(x)
+        jax.block_until_ready(x)
+        floor = (time.perf_counter() - t0) / 100
+        rows.append(Row(f"model_step.{arch}.dispatch_floor", floor * 1e6,
+                        f"min_layer_task_us={min(per_layer) * 1e6:.1f};"
+                        f"framework_overhead_ratio="
+                        f"{floor / max(min(per_layer), 1e-9):.3f}"))
+    return rows

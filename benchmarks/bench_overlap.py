@@ -1,0 +1,33 @@
+"""Paper Figure 11: efficiency vs task granularity for varying payloads.
+
+Spread pattern, 5 deps/task, 4 concurrent graphs; ``output_bytes`` sweeps
+the communication volume per dependency.  Compares the CSP backend (strict
+compute/communicate alternation, like MPI) against the whole-graph
+dataflow backend (XLA free to overlap/fuse) — the paper's asynchronous-
+systems-win-under-communication finding.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .common import Row, metg_for
+
+BYTES = [16, 4096, 65536]
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for be in ("shardmap-csp", "xla-static"):
+        for ob in BYTES:
+            res = metg_for(be, "spread", radix=5, num_graphs=4,
+                           output_bytes=ob, iterations_hi=4096,
+                           n_points=6, height=24)
+            for p in sorted(res.points, key=lambda p: -p.iterations):
+                rows.append(Row(
+                    f"overlap.{be}.bytes{ob}.iters{p.iterations}",
+                    p.granularity * 1e6,
+                    f"eff={p.efficiency:.3f}"))
+            rows.append(Row(f"overlap.{be}.bytes{ob}.METG",
+                            (res.metg or float("nan")) * 1e6,
+                            f"peak={res.peak_rate:.4g}"))
+    return rows

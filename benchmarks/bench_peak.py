@@ -1,0 +1,47 @@
+"""Paper Figures 2/6 (compute) and 8 (memory): peak rate vs problem size.
+
+Sweeps task duration at fixed graph shape and reports achieved FLOP/s
+(compute kernel) and B/s (memory kernel, constant working set) — the
+100%-efficiency baselines every METG below is measured against.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.backends import get_backend
+from repro.core import compute_metg, geometric_iterations, make_graph, run_sweep
+
+from .common import Row
+
+
+def _sweep(kernel: str, iterations_hi: int, **kw) -> List[Row]:
+    be = get_backend("xla-scan")
+
+    def graphs_at(iters):
+        return [make_graph(width=8, height=32, pattern="stencil",
+                           kernel=kernel, iterations=iters, **kw)]
+
+    def make_runner(iters):
+        return be.prepare(graphs_at(iters))
+
+    iters_list = geometric_iterations(iterations_hi, 4, 4.0)
+    pts = run_sweep(make_runner, graphs_at, iters_list, repeats=3)
+    res = compute_metg(pts)
+    unit = "flops" if kernel == "compute" else "bytes"
+    rows = [
+        Row(f"peak_{kernel}.iters{p.iterations}",
+            p.granularity * 1e6,
+            f"rate_{unit}_per_s={p.rate:.4g};eff={p.efficiency:.3f}")
+        for p in res.points
+    ]
+    rows.append(Row(f"peak_{kernel}.PEAK", 0.0,
+                    f"peak_{unit}_per_s={res.peak_rate:.4g};"
+                    f"metg50_us={(res.metg or 0) * 1e6:.2f}"))
+    return rows
+
+
+def run() -> List[Row]:
+    rows = _sweep("compute", 65536)
+    rows += _sweep("memory", 2048, span_bytes=16 * 1024,
+                   scratch_bytes=1 << 20)
+    return rows

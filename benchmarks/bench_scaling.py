@@ -1,0 +1,43 @@
+"""Paper Figures 4/5: weak/strong scaling contours vs the METG curve.
+
+On the 1-core CPU runtime, wall time cannot drop with added columns, but
+the paper's essential phenomenon — scaling curves compressing against the
+overhead floor at small problem sizes, with the floor's contour equal to
+the METG curve — is directly measurable: wall time vs per-task problem
+size at fixed shape flattens exactly where granularity hits METG.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.backends import get_backend
+from repro.core import compute_metg, make_graph, run_sweep
+
+from .common import Row
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for width in (4, 16):
+        be = get_backend("xla-scan")
+
+        def graphs_at(iters, width=width):
+            return [make_graph(width=width, height=32, pattern="stencil",
+                               kernel="compute", iterations=iters)]
+
+        def make_runner(iters):
+            return be.prepare(graphs_at(iters))
+
+        sizes = [4096, 1024, 256, 64, 16, 4, 1]
+        pts = run_sweep(make_runner, graphs_at, sizes, repeats=3)
+        res = compute_metg(pts)
+        for p in sorted(res.points, key=lambda q: -q.iterations):
+            rows.append(Row(
+                f"scaling.w{width}.size{p.iterations}",
+                p.wall_time * 1e6,
+                f"granularity_us={p.granularity * 1e6:.2f};"
+                f"eff={p.efficiency:.3f}"))
+        rows.append(Row(f"scaling.w{width}.METG",
+                        (res.metg or float("nan")) * 1e6,
+                        f"floor_wall_us={(res.metg or 0) * 32 * width * 1e6:.1f}"))
+    return rows

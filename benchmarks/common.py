@@ -1,0 +1,66 @@
+"""Shared benchmark infrastructure.
+
+Every bench module exposes ``run() -> List[Row]``; ``benchmarks.run``
+aggregates and prints ``name,us_per_call,derived`` CSV (one row per
+measurement the paper's corresponding table/figure would plot).
+
+CPU-runtime note (DESIGN.md §7): these are real wall-clock measurements of
+the four execution backends on the one-core CPU runtime — the paper's
+comparative methodology (backends x patterns x granularity), not its Cori
+absolute numbers.  Production-mesh numbers live in EXPERIMENTS.md
+§Roofline, derived from the compiled dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import (TaskGraph, compute_metg, geometric_iterations,
+                        make_graph, run_sweep)
+from repro.backends import get_backend
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str = ""
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+def metg_for(
+    backend_name: str,
+    pattern: str,
+    width: int = 8,
+    height: int = 32,
+    iterations_hi: int = 4096,
+    n_points: int = 7,
+    num_graphs: int = 1,
+    kernel: str = "compute",
+    output_bytes: int = 16,
+    imbalance: float = 0.0,
+    repeats: int = 3,
+    threshold: float = 0.5,
+    peak_rate: Optional[float] = None,
+    **graph_kw,
+):
+    """Run the paper's METG procedure for one (backend, pattern) cell."""
+    be = get_backend(backend_name)
+
+    def graphs_at(iters: int):
+        g = make_graph(width=width, height=height, pattern=pattern,
+                       kernel=kernel, iterations=iters,
+                       output_bytes=output_bytes, imbalance=imbalance,
+                       **graph_kw)
+        return [g] * num_graphs
+
+    def make_runner(iters: int):
+        return be.prepare(graphs_at(iters))
+
+    factor = max(2.0, (iterations_hi) ** (1.0 / max(n_points - 1, 1)))
+    iters_list = geometric_iterations(iterations_hi, 1, factor)[:n_points]
+    points = run_sweep(make_runner, graphs_at, iters_list, cores=1,
+                       repeats=repeats)
+    return compute_metg(points, threshold=threshold, peak_rate=peak_rate)

@@ -1,0 +1,61 @@
+"""Benchmark registry: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
+
+  bench_peak             Figures 2/6 (peak FLOP/s), Figure 8 (peak B/s)
+  bench_metg_patterns    Figure 9 (METG x backend x pattern)
+  bench_metg_deps        Figure 10 (METG vs deps/task)
+  bench_overlap          Figure 11 (communication overlap)
+  bench_imbalance        Figure 12 (load imbalance)
+  bench_scaling          Figures 4/5 (scaling contour = METG curve)
+  bench_metg_validation  Figure 14 / Table 6 (METG predicts the limit)
+  bench_model_step       §V-C applied to this framework's own dispatch
+
+Run all: ``PYTHONPATH=src python -m benchmarks.run``
+One:     ``PYTHONPATH=src python -m benchmarks.run --only bench_metg_deps``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "bench_peak",
+    "bench_metg_patterns",
+    "bench_metg_deps",
+    "bench_overlap",
+    "bench_imbalance",
+    "bench_scaling",
+    "bench_metg_validation",
+    "bench_model_step",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench module names")
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in mods:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # keep the suite running
+            failures.append((name, e))
+            print(f"{name}.ERROR,0,{type(e).__name__}: {e}", flush=True)
+            continue
+        for row in rows:
+            print(row.csv(), flush=True)
+        print(f"{name}.elapsed,{(time.time() - t0) * 1e6:.0f},", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

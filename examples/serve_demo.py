@@ -1,0 +1,30 @@
+"""Serve a small model with batched requests (continuous batching).
+
+Run: PYTHONPATH=src python examples/serve_demo.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import model as M
+from repro.models.layers import split_leaves
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    cfg = reduced(get_config("mixtral-8x7b"))  # MoE family, ring KV cache
+    params, _ = split_leaves(M.init_model(jax.random.PRNGKey(0), cfg))
+    engine = ServeEngine(cfg, params, batch_slots=3, max_len=128)
+
+    rng = np.random.RandomState(0)
+    rids = [engine.submit(rng.randint(1, cfg.vocab_size, size=n),
+                          max_new_tokens=m)
+            for n, m in [(5, 8), (3, 4), (9, 6), (2, 10), (7, 5)]]
+    print(f"submitted {len(rids)} requests into 3 batch slots")
+    out = engine.run()
+    for rid in rids:
+        print(f"  request {rid}: {len(out[rid])} tokens -> {out[rid]}")
+
+
+if __name__ == "__main__":
+    main()

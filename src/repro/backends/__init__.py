@@ -1,0 +1,28 @@
+"""Execution backends — the 'n systems' axis of the paper's O(m+n) design.
+
+| backend       | paper analogue                  | schedule        | dispatch cost |
+|---------------|---------------------------------|-----------------|---------------|
+| xla-static    | PaRSEC PTG / Regent / TF graph  | unrolled, AOT   | ~0 per task   |
+| xla-scan      | OpenMP forall / vectorized      | compiled loop   | O(1) per step |
+| shardmap-csp  | MPI CSP (Listing 2)             | SPMD + messages | O(1) per step |
+| host-dynamic  | Dask / Spark / Swift-T          | host per task   | O(1) per task |
+
+Every backend runs every graph (pattern x kernel x payload x imbalance)
+unchanged, and is validated against the numpy oracle in core.validate.
+"""
+from .base import Backend, backend_names, get_backend, register_backend
+from .csp import CSPBackend
+from .dataflow import DataflowBackend
+from .host import HostBackend
+from .scanvec import ScanBackend
+
+__all__ = [
+    "Backend",
+    "backend_names",
+    "get_backend",
+    "register_backend",
+    "CSPBackend",
+    "DataflowBackend",
+    "HostBackend",
+    "ScanBackend",
+]

@@ -1,0 +1,50 @@
+"""Backend interface: a 'programming system' in the paper's sense.
+
+Each backend executes a list of concurrent task graphs (paper: multiple
+graphs model task parallelism) and returns the final-timestep payload of
+each.  ``runner`` returns a zero-arg callable that re-executes the prepared
+workload and blocks until completion — the METG harness times that.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence, Type
+
+import numpy as np
+
+from ..core.graph import TaskGraph
+
+_BACKENDS: Dict[str, Type["Backend"]] = {}
+
+
+def register_backend(name: str):
+    def deco(cls):
+        cls.name = name
+        _BACKENDS[name] = cls
+        return cls
+
+    return deco
+
+
+def backend_names() -> List[str]:
+    return sorted(_BACKENDS)
+
+
+def get_backend(name: str, **kwargs) -> "Backend":
+    if name not in _BACKENDS:
+        raise KeyError(f"unknown backend {name!r}; known: {backend_names()}")
+    return _BACKENDS[name](**kwargs)
+
+
+class Backend:
+    """Executes task graphs. Subclasses implement ``prepare``."""
+
+    name = "base"
+    # paper Table 4 analogue, reported by benchmarks:
+    paradigm = ""
+
+    def prepare(self, graphs: Sequence[TaskGraph]) -> Callable[[], List[np.ndarray]]:
+        """Compile/stage the workload; returned callable blocks on finish."""
+        raise NotImplementedError
+
+    def run(self, graphs: Sequence[TaskGraph]) -> List[np.ndarray]:
+        return self.prepare(graphs)()

@@ -1,0 +1,164 @@
+"""Shared JAX task body used by every backend (the O(m+n) trick).
+
+All backends execute the *same* width-vectorized task body; they differ only
+in how timesteps are scheduled and how dependency payloads move.  This
+mirrors the paper's core API: the task body and kernels are provided
+centrally so that backend comparisons are apples-to-apples (paper §II).
+
+Numerical contract (must match core.kernel_ref bitwise for elementwise
+kernels): the kernel state is seeded with ``start + acc * 2**-46`` where
+``acc < 2**20`` — this rounds to exactly ``start`` in float32 (the increment
+is below half an ulp of every start value used) but blocks XLA constant
+folding, so the kernel loop is always executed at run time.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import CHECKSUM_MOD, TaskGraph
+from ..core.kernel_ref import COMPUTE_C, MEM_BIAS, MEM_SCALE, mxu_weight
+from ..core.kernel_spec import COMPUTE_TILE, MXU_DIM, KernelSpec
+
+_FOLD_BLOCK = 2.0**-46  # see module docstring
+
+
+def checksum_vec(t, cols):
+    """uint32-wrapping checksum; matches TaskGraph.checksum exactly."""
+    t = jnp.asarray(t, jnp.uint32)
+    cols = jnp.asarray(cols, jnp.uint32)
+    k1 = jnp.uint32(2654435761)
+    k2 = jnp.uint32(40503)
+    return ((t * k1 + cols * k2) % jnp.uint32(CHECKSUM_MOD)).astype(jnp.uint32)
+
+
+def combine_acc(dep_matrix, prev_combined):
+    """acc_i = sum_j M[i,j] * combined_j  (mod 2^20), exact uint32 math."""
+    m = dep_matrix.astype(jnp.uint32)  # (W, W)
+    acc = (m * prev_combined[None, :].astype(jnp.uint32)).sum(axis=1)
+    return (acc % jnp.uint32(CHECKSUM_MOD)).astype(jnp.uint32)
+
+
+def _looped(step_fn, state, iters_per_col, max_iters: int, dynamic: bool):
+    """Run the kernel loop.
+
+    Static mode: ``max_iters`` steps with a per-column mask (keep-old beyond
+    each column's count) — what vectorized runtimes must do, and why they
+    cannot exploit load imbalance (paper §V-G).
+    Dynamic mode: traced trip count (``while``-loop lowering) — per-task
+    systems (host dispatch, CSP with one column per rank) genuinely run
+    fewer iterations for short tasks.  Values are bitwise identical.
+    """
+    if dynamic:
+        trip = jnp.max(iters_per_col)
+        return jax.lax.fori_loop(0, trip, lambda k, st: step_fn(k, st), state)
+
+    def body(k, st):
+        new = step_fn(k, st)
+        keep = (k < iters_per_col)  # (W,)
+        keep = keep.reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(keep, new, st)
+
+    return jax.lax.fori_loop(0, max_iters, body, state)
+
+
+def run_kernel_vec(kernel: KernelSpec, iters_per_col, acc, max_iters: int,
+                   dynamic: bool = False):
+    """Vectorized kernel over width; returns (W,) f32 results."""
+    width = acc.shape[0]
+    seed = acc.astype(jnp.float32) * jnp.float32(_FOLD_BLOCK)
+
+    if kernel.kind == "empty":
+        # No work; preserve the data dependency so scheduling is honest.
+        return seed * jnp.float32(0.0)
+
+    if kernel.kind == "compute":
+        tile = jnp.float32(0.5) + seed[:, None, None]
+        tile = jnp.broadcast_to(tile, (width,) + COMPUTE_TILE)
+        out = _looped(lambda k, a: a * a - COMPUTE_C, tile, iters_per_col,
+                      max_iters, dynamic)
+        return out[:, 0, 0]
+
+    if kernel.kind == "compute_mxu":
+        b = jnp.float32(0.25) + seed[:, None, None]
+        b = jnp.broadcast_to(b, (width, MXU_DIM, MXU_DIM))
+        w = jnp.asarray(mxu_weight())
+        inv = jnp.float32(1.0 / MXU_DIM)
+
+        def step(k, bb):
+            return jnp.einsum("wij,jk->wik", bb, w) * inv + bb * jnp.float32(0.5)
+
+        out = _looped(step, b, iters_per_col, max_iters, dynamic)
+        return out[:, 0, 0]
+
+    if kernel.kind == "memory":
+        span = max(1, kernel.span_bytes // 4)
+        size = max(span, kernel.scratch_bytes // 4)
+        size -= size % span
+        nwin = size // span
+        x = jnp.float32(1.0) + seed[:, None]
+        x = jnp.broadcast_to(x, (width, size))
+
+        def step(k, st):
+            wstart = (k % nwin) * span
+            window = jax.lax.dynamic_slice(st, (0, wstart), (width, span))
+            window = window * MEM_SCALE + MEM_BIAS
+            return jax.lax.dynamic_update_slice(st, window, (0, wstart))
+
+        out = _looped(step, x, iters_per_col, max_iters, dynamic)
+        return out[:, 0]
+
+    raise ValueError(kernel.kind)
+
+
+def make_payload(t, cols, base, combined, result, payload_elems: int):
+    """Assemble the (ncols, P) payload rows for global column ids ``cols``."""
+    n = cols.shape[0]
+    tt = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (n,))
+    head = jnp.stack(
+        [tt, cols.astype(jnp.float32), base.astype(jnp.float32),
+         combined.astype(jnp.float32), result],
+        axis=1,
+    )
+    if payload_elems > 5:
+        ballast = jnp.broadcast_to(result[:, None], (n, payload_elems - 5))
+        return jnp.concatenate([head, ballast], axis=1)
+    return head
+
+
+def timestep(graph: TaskGraph, t, prev_payload, dep_matrix, iters_per_col,
+             cols=None, dynamic: bool = False):
+    """Execute one timestep of ``graph``, vectorized over a column block.
+
+    prev_payload: (W_ctx, P) f32 from t-1 — the *context* columns this block
+                  can read (full width for single-device backends; local
+                  block + halo/gathered columns for CSP shards).
+    dep_matrix:   (n, W_ctx) uint8 — rows select deps within the context.
+    iters_per_col:(n,) int32 — per-task durations (imbalance-aware).
+    cols:         (n,) global column ids (defaults to arange(W_ctx)).
+    Returns the new (n, P) payload block.
+    """
+    if cols is None:
+        cols = jnp.arange(graph.width)
+    prev_combined = prev_payload[:, 3].astype(jnp.uint32)
+    acc = combine_acc(dep_matrix, prev_combined)
+    base = checksum_vec(t, cols)
+    combined = (base + acc) % jnp.uint32(CHECKSUM_MOD)
+    result = run_kernel_vec(graph.kernel, iters_per_col, acc,
+                            graph.kernel.iterations, dynamic=dynamic)
+    return make_payload(t, cols, base, combined, result, graph.payload_elems)
+
+
+def graph_static_inputs(graph: TaskGraph) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side constants: dep matrices (H,W,W) u8 and iteration counts (H,W) i32."""
+    mats = graph.dependence_matrices().astype(np.uint8)
+    iters = np.array(
+        [[graph.task_iterations(t, i) for i in range(graph.width)]
+         for t in range(graph.height)],
+        dtype=np.int32,
+    )
+    return mats, iters

@@ -1,0 +1,151 @@
+"""CSP backend: explicit SPMD ranks exchanging messages per timestep.
+
+Analogue of the paper's MPI implementation (Listing 2): columns are
+distributed over device ranks via ``shard_map``; every timestep each rank
+receives the payloads its local tasks depend on, executes its tasks, and
+sends its outputs.  Two communication modes, chosen like an MPI programmer
+would:
+
+* ``halo``      — nearest-neighbour ``ppermute`` exchange (stencil/sweep/
+                  nearest patterns whose dependency reach fits in a halo).
+* ``allgather`` — general fallback for wide patterns (fft/spread/random),
+                  the MPI_Allgather of payload rows.
+
+Like MPI CSP, communication and computation strictly alternate — no
+overlap, no task parallelism — which is exactly why the paper finds MPI
+loses its advantage under imbalance and heavy communication (§V-F/G).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core.graph import TaskGraph
+from . import body
+from .base import Backend, register_backend
+
+AXIS = "cols"
+
+
+def _dependency_reach(graph: TaskGraph) -> int:
+    """max |j - i| over all deps — the halo width an MPI rank would post."""
+    reach = 0
+    for t in range(1, graph.height):
+        m = graph.dependence_matrix(t)
+        for i, j in np.argwhere(m):
+            reach = max(reach, abs(int(j) - int(i)))
+    return reach
+
+
+@register_backend("shardmap-csp")
+class CSPBackend(Backend):
+    paradigm = "explicit SPMD message passing (MPI CSP analogue)"
+
+    def __init__(self, mesh: Mesh | None = None, comm: str = "auto"):
+        if mesh is None:
+            devs = np.array(jax.devices())
+            mesh = Mesh(devs, (AXIS,))
+        if comm not in ("auto", "halo", "allgather"):
+            raise ValueError(comm)
+        self.mesh = mesh
+        self.comm = comm
+        self.ndev = mesh.shape[AXIS]
+
+    def _mode(self, graph: TaskGraph, local: int) -> str:
+        if self.comm != "auto":
+            return self.comm
+        reach = _dependency_reach(graph)
+        return "halo" if 0 < reach <= local else ("allgather" if reach else "halo")
+
+    def prepare(self, graphs: Sequence[TaskGraph]):
+        progs = [self._prepare_one(g) for g in graphs]
+
+        def runner() -> List[np.ndarray]:
+            outs = [p() for p in progs]
+            return [np.asarray(o) for o in outs]
+
+        return runner
+
+    def _prepare_one(self, graph: TaskGraph):
+        W, H, Pels = graph.width, graph.height, graph.payload_elems
+        ndev = self.ndev
+        if W % ndev:
+            raise ValueError(f"width {W} not divisible by {ndev} ranks")
+        local = W // ndev
+        mode = self._mode(graph, local)
+        reach = _dependency_reach(graph) if mode == "halo" else 0
+        halo = min(reach, local)
+
+        mats, iters = body.graph_static_inputs(graph)  # (H,W,W), (H,W)
+        if mode == "halo":
+            # re-index dep columns into [left halo | local | right halo]
+            ctx = 2 * halo + local
+            lmats = np.zeros((H, W, ctx), dtype=np.uint8)
+            for t in range(H):
+                for i in range(W):
+                    shard, li = divmod(i, local)
+                    base = shard * local - halo
+                    for j in np.argwhere(mats[t, i]).ravel():
+                        lj = int(j) - base
+                        assert 0 <= lj < ctx, (t, i, j, lj)
+                        lmats[t, i, lj] = 1
+        else:
+            lmats = mats  # context is the full gathered width
+
+        lmats_j = jnp.asarray(lmats)
+        iters_j = jnp.asarray(iters)
+        dynamic = local == 1  # true per-rank loops can stop early
+
+        def rank_program(lmats_l, iters_l):
+            """Runs on one rank: lmats_l (H, local, ctx), iters_l (H, local)."""
+            rank = jax.lax.axis_index(AXIS)
+            cols = rank * local + jnp.arange(local)
+            payload0 = jnp.zeros((local, Pels), jnp.float32)
+            # the carry becomes device-varying after the first exchange;
+            # mark it so from the start (shard_map vma typing)
+            payload0 = jax.lax.pcast(payload0, (AXIS,), to="varying")
+
+            def step(payload, xs):
+                t, mat_t, it_t = xs
+                if mode == "halo":
+                    if halo > 0:
+                        right_dst = [(r, r + 1) for r in range(ndev - 1)]
+                        left_dst = [(r, r - 1) for r in range(1, ndev)]
+                        from_left = jax.lax.ppermute(
+                            payload[-halo:], AXIS, right_dst) if right_dst else \
+                            jnp.zeros((halo, Pels), jnp.float32)
+                        from_right = jax.lax.ppermute(
+                            payload[:halo], AXIS, left_dst) if left_dst else \
+                            jnp.zeros((halo, Pels), jnp.float32)
+                        ctx_payload = jnp.concatenate(
+                            [from_left, payload, from_right])
+                    else:
+                        ctx_payload = payload
+                else:
+                    ctx_payload = jax.lax.all_gather(payload, AXIS, tiled=True)
+                new = body.timestep(graph, t, ctx_payload, mat_t, it_t,
+                                    cols=cols, dynamic=dynamic)
+                return new, None
+
+            ts = jnp.arange(H, dtype=jnp.uint32)
+            final, _ = jax.lax.scan(step, payload0, (ts, lmats_l, iters_l))
+            return final
+
+        shmapped = jax.shard_map(
+            rank_program,
+            mesh=self.mesh,
+            in_specs=(P(None, AXIS, None), P(None, AXIS)),
+            out_specs=P(AXIS, None),
+        )
+        fn = jax.jit(shmapped)
+        compiled = fn.lower(lmats_j, iters_j).compile()
+
+        def run_one():
+            return jax.block_until_ready(compiled(lmats_j, iters_j))
+
+        return run_one

@@ -1,0 +1,28 @@
+"""Assigned architecture configs (public-literature, see each module)."""
+from . import (  # noqa: F401
+    arctic_480b,
+    hubert_xlarge,
+    mamba2_2p7b,
+    minitron_8b,
+    mixtral_8x7b,
+    qwen1p5_0p5b,
+    qwen2_72b,
+    qwen2_vl_2b,
+    recurrentgemma_2b,
+    yi_6b,
+)
+from .base import (
+    SHAPES,
+    InputShape,
+    ModelConfig,
+    config_names,
+    get_config,
+    reduced,
+    shape_applicable,
+)
+
+ALL_ARCHS = [
+    "mixtral-8x7b", "arctic-480b", "mamba2-2.7b", "recurrentgemma-2b",
+    "yi-6b", "qwen1.5-0.5b", "qwen2-72b", "minitron-8b", "qwen2-vl-2b",
+    "hubert-xlarge",
+]

@@ -1,0 +1,31 @@
+"""Task Bench core: the paper's primary contribution.
+
+- graph: 2-D iteration space + dependence relation + self-validating body
+- patterns: trivial/stencil/fft/sweep/tree/random/nearest/spread relations
+- kernel_spec / kernel_ref: compute- and memory-bound task kernels
+- metg: minimum-effective-task-granularity harness (paper §IV)
+- validate: numpy oracle executor + backend output checks
+"""
+from .graph import CHECKSUM_MOD, TaskGraph, make_graph, replicate
+from .kernel_spec import KernelSpec
+from .metg import METGResult, SweepPoint, compute_metg, geometric_iterations, run_sweep
+from .patterns import get_pattern, pattern_names
+from .validate import check_multi, check_outputs, execute_reference
+
+__all__ = [
+    "CHECKSUM_MOD",
+    "TaskGraph",
+    "make_graph",
+    "replicate",
+    "KernelSpec",
+    "METGResult",
+    "SweepPoint",
+    "compute_metg",
+    "geometric_iterations",
+    "run_sweep",
+    "get_pattern",
+    "pattern_names",
+    "check_multi",
+    "check_outputs",
+    "execute_reference",
+]

@@ -1,0 +1,213 @@
+"""Task graphs: the paper's 2-D iteration space + dependence relation.
+
+The core API mirrors paper Table 3::
+
+    Graph.contains_point(t, i)   -- is task (t, i) in the graph?
+    Graph.deps(t, i)             -- predecessors of (t, i) (in timestep t-1)
+    Graph.reverse_deps(t, i)     -- successors of (t, i) (in timestep t+1)
+    Graph.execute_point(t, i, inputs) -- reference task body (numpy)
+
+Task payloads are float32 vectors of ``payload_elems`` entries:
+
+    payload[0] = t, payload[1] = i        (self-identification, paper §II)
+    payload[2] = checksum(t, i)           (locally verifiable by consumers)
+    payload[3] = combined history checksum (base + sum of dep slot-3 values)
+    payload[4] = kernel result            (proves work was done)
+    payload[5:] = kernel result broadcast (communication ballast)
+
+Checksums are exact in float32 (kept < 2^20), so every backend must
+reproduce them bit-for-bit; the kernel-result slot is compared with a small
+tolerance (matmul reduction order may differ between backends).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .kernel_spec import KernelSpec
+from .patterns import PatternInstance, get_pattern
+
+CHECKSUM_MOD = 1 << 20  # keep exact in f32
+MIN_PAYLOAD_ELEMS = 5
+
+
+def _imbalance_u(t: int, i: int, seed: int) -> float:
+    """Deterministic uniform in [0,1) per task (paper §V-G)."""
+    import hashlib
+
+    h = hashlib.blake2b(f"imb:{seed}:{t}:{i}".encode(), digest_size=8).digest()
+    return int.from_bytes(h, "little") / 2.0**64
+
+
+@dataclass(frozen=True)
+class TaskGraph:
+    """One parameterized task graph (paper Table 1)."""
+
+    width: int = 16
+    height: int = 32
+    pattern: str = "stencil"
+    pattern_params: Tuple[Tuple[str, object], ...] = ()
+    kernel: KernelSpec = field(default_factory=KernelSpec)
+    output_bytes: int = 16  # bytes per dependency payload
+
+    def __post_init__(self):
+        if self.width < 1 or self.height < 1:
+            raise ValueError("width and height must be >= 1")
+        object.__setattr__(self, "_pat", get_pattern(self.pattern, **dict(self.pattern_params)))
+
+    # -- core API (paper Table 3) -------------------------------------------
+    def contains_point(self, t: int, i: int) -> bool:
+        return 0 <= t < self.height and 0 <= i < self.width
+
+    def deps(self, t: int, i: int) -> List[int]:
+        if not self.contains_point(t, i):
+            return []
+        return self._pat.deps(t, i, self.width)
+
+    def reverse_deps(self, t: int, i: int) -> List[int]:
+        if not self.contains_point(t, i):
+            return []
+        return self._pat.reverse_deps(t, i, self.width, self.height)
+
+    def dependence_matrix(self, t: int) -> np.ndarray:
+        """bool[width, width]: M[i, j] iff (t, i) depends on (t-1, j)."""
+        return self._pat.matrix(t, self.width)
+
+    def dependence_matrices(self) -> np.ndarray:
+        """Stacked matrices for all timesteps: bool[height, width, width].
+
+        Time-invariant patterns produce identical slices; backends may
+        collapse them (the dataflow backend checks this to enable scan reuse).
+        """
+        return np.stack([self.dependence_matrix(t) for t in range(self.height)])
+
+    def is_time_invariant(self) -> bool:
+        ms = self.dependence_matrices()[1:]
+        return bool(ms.size == 0 or (ms == ms[0]).all())
+
+    # -- payloads ------------------------------------------------------------
+    @property
+    def payload_elems(self) -> int:
+        return max(MIN_PAYLOAD_ELEMS, self.output_bytes // 4)
+
+    def task_iterations(self, t: int, i: int) -> int:
+        """Per-task duration after imbalance scaling."""
+        k = self.kernel
+        if k.imbalance <= 0.0:
+            return k.iterations
+        u = _imbalance_u(t, i, k.seed)
+        return max(1, int(round(k.iterations * (1.0 - k.imbalance * u))))
+
+    def max_radix(self) -> int:
+        return self._pat.max_radix(self.width, self.height)
+
+    # -- reference task body (numpy oracle) ----------------------------------
+    def checksum(self, t: int, i: int) -> int:
+        """uint32 wrap-around hash of coordinates, reduced mod 2^20.
+
+        Written so the identical arithmetic is exact both in python ints and
+        in jnp.uint32 (backends) and in float32 payload slots (< 2^20).
+        """
+        return ((t * 2654435761 + i * 40503) % (1 << 32)) % CHECKSUM_MOD
+
+    def execute_point(
+        self, t: int, i: int, inputs: Sequence[np.ndarray]
+    ) -> np.ndarray:
+        """Reference (numpy) task body; validates inputs, runs kernel.
+
+        ``inputs`` must be the payloads of ``deps(t, i)`` in sorted column
+        order.  Raises AssertionError on validation failure (paper §II:
+        'Inputs are verified by checking the expected dependencies against
+        those received').
+        """
+        deps = self.deps(t, i)
+        assert len(inputs) == len(deps), (
+            f"task ({t},{i}) expected {len(deps)} inputs, got {len(inputs)}"
+        )
+        acc = 0
+        for j, buf in zip(deps, inputs):
+            assert int(buf[0]) == t - 1 and int(buf[1]) == j, (
+                f"task ({t},{i}) received payload from "
+                f"({int(buf[0])},{int(buf[1])}), expected ({t - 1},{j})"
+            )
+            expect = self.checksum(t - 1, j)
+            assert int(buf[2]) == expect, (
+                f"task ({t},{i}) dep ({t - 1},{j}) checksum {int(buf[2])}"
+                f" != expected {expect}"
+            )
+            acc = (acc + int(buf[3])) % CHECKSUM_MOD
+        result = self._run_kernel_ref(t, i)
+        out = np.zeros(self.payload_elems, dtype=np.float32)
+        out[0], out[1] = t, i
+        out[2] = self.checksum(t, i)
+        out[3] = (self.checksum(t, i) + acc) % CHECKSUM_MOD
+        out[4] = result
+        if self.payload_elems > 5:
+            out[5:] = result
+        return out
+
+    def _run_kernel_ref(self, t: int, i: int) -> float:
+        from . import kernel_ref
+
+        return kernel_ref.run_kernel_ref(self.kernel, self.task_iterations(t, i))
+
+    # -- convenience ----------------------------------------------------------
+    def with_kernel(self, kernel: KernelSpec) -> "TaskGraph":
+        return replace(self, kernel=kernel)
+
+    def with_iterations(self, iterations: int) -> "TaskGraph":
+        return replace(self, kernel=self.kernel.with_iterations(iterations))
+
+    @property
+    def num_tasks(self) -> int:
+        return self.width * self.height
+
+    def total_useful_work(self) -> float:
+        """Total FLOPs (or bytes) across all tasks, imbalance-aware."""
+        k = self.kernel
+        per_iter = k.useful_work() / max(k.iterations, 1)
+        total_iters = sum(
+            self.task_iterations(t, i)
+            for t in range(self.height)
+            for i in range(self.width)
+        ) if k.imbalance > 0 else k.iterations * self.num_tasks
+        return per_iter * total_iters
+
+
+def make_graph(
+    width: int = 16,
+    height: int = 32,
+    pattern: str = "stencil",
+    kernel: str = "compute",
+    iterations: int = 16,
+    output_bytes: int = 16,
+    imbalance: float = 0.0,
+    span_bytes: int = 64 * 1024,
+    scratch_bytes: int = 1 << 20,
+    seed: int = 0,
+    **pattern_params,
+) -> TaskGraph:
+    """Ergonomic constructor mirroring the paper's CLI parameters."""
+    ks = KernelSpec(
+        kind=kernel,
+        iterations=iterations,
+        imbalance=imbalance,
+        span_bytes=span_bytes,
+        scratch_bytes=scratch_bytes,
+        seed=seed,
+    )
+    return TaskGraph(
+        width=width,
+        height=height,
+        pattern=pattern,
+        pattern_params=tuple(sorted(pattern_params.items())),
+        kernel=ks,
+        output_bytes=output_bytes,
+    )
+
+
+def replicate(graph: TaskGraph, n: int) -> List[TaskGraph]:
+    """n identical concurrent graphs (paper Fig 9d: task parallelism)."""
+    return [graph for _ in range(n)]

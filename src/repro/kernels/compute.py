@@ -1,0 +1,57 @@
+"""Task Bench compute-bound kernel as a Pallas TPU kernel.
+
+TPU adaptation of paper Listing 1 (64-wide AVX2 FMA loop): each task owns
+one (8, 128) float32 tile — a single TPU vector register — and performs one
+fused multiply-add per element per iteration on the VPU.  Tiles for a block
+of task columns are staged in VMEM; the grid walks column blocks.
+
+Per-column iteration counts support the paper's load-imbalance studies; the
+loop is masked exactly like the XLA reference so results match bitwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.kernel_ref import COMPUTE_C
+from ..core.kernel_spec import COMPUTE_TILE
+
+
+def _compute_kernel(iters_ref, tiles_ref, out_ref, *, max_iters: int):
+    tiles = tiles_ref[...]  # (Wb, 8, 128) f32, VMEM
+    iters = iters_ref[...]  # (Wb,) int32
+
+    def step(k, a):
+        new = a * a - COMPUTE_C
+        keep = (k < iters)[:, None, None]
+        return jnp.where(keep, new, a)
+
+    out_ref[...] = jax.lax.fori_loop(0, max_iters, step, tiles)
+
+
+def taskbench_compute(
+    tiles: jax.Array,  # (W, 8, 128) f32 initial tiles
+    iters: jax.Array,  # (W,) int32 per-column iteration counts
+    max_iters: int,
+    block_cols: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    W = tiles.shape[0]
+    assert tiles.shape[1:] == COMPUTE_TILE, tiles.shape
+    block_cols = min(block_cols, W)
+    assert W % block_cols == 0, (W, block_cols)
+    grid = (W // block_cols,)
+    return pl.pallas_call(
+        functools.partial(_compute_kernel, max_iters=max_iters),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_cols,), lambda i: (i,)),
+            pl.BlockSpec((block_cols,) + COMPUTE_TILE, lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_cols,) + COMPUTE_TILE, lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(tiles.shape, jnp.float32),
+        interpret=interpret,
+    )(iters, tiles)

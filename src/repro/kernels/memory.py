@@ -1,0 +1,57 @@
+"""Task Bench memory-bound kernel as a Pallas TPU kernel.
+
+TPU adaptation of the paper's AVX2 streaming kernel: the scratch array lives
+in HBM; the grid walks its windows, each program stages one ``span``-sized
+window in VMEM and applies its share of the read-scale-write iterations.
+The working set (``scratch_bytes``) stays constant as iterations shrink —
+the paper's guard against cache-effect speedups (§II); on TPU the analogous
+hazard is a working set that suddenly fits VMEM.
+
+The sequential window walk (k = 0..iters-1 touching window k % nwin) is
+reordered per-window: window w receives iterations {k : k % nwin == w},
+which commute because windows are disjoint — results are bitwise equal to
+the reference order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.kernel_ref import MEM_BIAS, MEM_SCALE
+
+
+def _memory_kernel(x_ref, o_ref, *, reps_base: int, reps_rem: int):
+    w = pl.program_id(0)
+    reps = reps_base + (w < reps_rem).astype(jnp.int32)
+    win = x_ref[...]
+
+    def step(_, a):
+        return a * MEM_SCALE + MEM_BIAS
+
+    o_ref[...] = jax.lax.fori_loop(0, reps, step, win)
+
+
+def taskbench_memory(
+    x: jax.Array,  # (size,) f32 scratch, size % span == 0
+    iterations: int,
+    span: int,
+    interpret: bool = False,
+) -> jax.Array:
+    size = x.shape[0]
+    assert size % span == 0, (size, span)
+    nwin = size // span
+    return pl.pallas_call(
+        functools.partial(
+            _memory_kernel,
+            reps_base=iterations // nwin,
+            reps_rem=iterations % nwin,
+        ),
+        grid=(nwin,),
+        in_specs=[pl.BlockSpec((span,), lambda w: (w,))],
+        out_specs=pl.BlockSpec((span,), lambda w: (w,)),
+        out_shape=jax.ShapeDtypeStruct((size,), jnp.float32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,150 @@
+"""Jitted dispatch wrappers: Pallas on TPU, XLA reference elsewhere.
+
+``impl`` selects the path:
+  - "auto":   Pallas when the default backend is TPU, else the jnp reference
+  - "pallas": Pallas compiled (TPU only)
+  - "interpret": Pallas interpret mode (CPU validation of the kernel body)
+  - "ref":    pure-jnp oracle
+
+Models call these entry points; the multi-pod dry-run lowers the reference
+path (Pallas cannot lower for the CPU backend), which is also the path whose
+HLO feeds the roofline analysis.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import ref as _ref
+from . import ssd as _ssd
+from .compute import taskbench_compute as _tb_compute
+from .memory import taskbench_memory as _tb_memory
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+# ----------------------------------------------------------- task bench
+def taskbench_compute(tiles, iters, max_iters: int, impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "ref":
+        from ..core.kernel_ref import COMPUTE_C
+
+        # masked per-column loop, same semantics as the kernel
+        def step(k, a):
+            keep = (k < iters)[:, None, None]
+            return jnp.where(keep, a * a - COMPUTE_C, a)
+
+        return jax.lax.fori_loop(0, max_iters, step, tiles)
+    return _tb_compute(tiles, iters, max_iters, interpret=(impl == "interpret"))
+
+
+def taskbench_memory(x, iterations: int, span: int, impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.taskbench_memory_ref(x, iterations, span)
+    return _tb_memory(x, iterations, span, interpret=(impl == "interpret"))
+
+
+# ------------------------------------------------------------- attention
+def attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Skv, Hkv, D)
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,  # int (static, any impl) or traced scalar (ref impl only)
+    kv_positions: Optional[jax.Array] = None,  # ring caches (ref impl only)
+    scale: Optional[float] = None,
+    impl: str = "auto",
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    impl = _resolve(impl)
+    if impl != "ref" and (kv_positions is not None or not isinstance(q_offset, int)):
+        # decode-time dynamic offsets/ring buffers run the XLA path; the
+        # Pallas kernel covers the static-offset train/prefill hot spot.
+        impl = "ref"
+    if impl == "ref":
+        Sq, Skv = q.shape[1], k.shape[1]
+        if Sq >= 2048 and Skv >= 8192:
+            # long prefill: bound the logits footprint (inference path; the
+            # Pallas kernel is the TPU answer, this is the XLA one)
+            return _ref.attention_ref_chunked(
+                q, k, v, causal=causal, window=window, q_offset=q_offset,
+                kv_positions=kv_positions, scale=scale,
+            )
+        return _ref.attention_ref(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            kv_positions=kv_positions, scale=scale,
+        )
+    # kernel layout is (B, H, S, D)
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = _fa.flash_attention(
+        qt, kt, vt,
+        causal=causal, window=window, q_offset=q_offset, scale=scale,
+        block_q=block_q, block_k=block_k,
+        interpret=(impl == "interpret"),
+    )
+    return jnp.swapaxes(out, 1, 2)
+
+
+# ------------------------------------------------------------------ SSD
+def ssd(
+    x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array, Cm: jax.Array,
+    D: Optional[jax.Array] = None,
+    chunk: int = 128,
+    impl: str = "auto",
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence SSD with zero initial state -> (y, final_state).
+
+    Sequences are zero-padded up to a chunk multiple; padded steps carry
+    dt=0 (decay factor exp(0)=1, zero input) so the final state is exact.
+    """
+    impl = _resolve(impl)
+    S = x.shape[1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if impl == "ref":
+        y, h = _ref.ssd_chunked_ref(
+            x, dt, A, Bm, Cm, D, chunk=chunk, return_state=True
+        )
+    else:
+        y, h = _ssd.ssd_chunked(
+            x, dt, A, Bm, Cm, D, chunk=chunk, interpret=(impl == "interpret")
+        )
+    if pad:
+        y = y[:, :S]
+    return y, h
+
+
+def ssd_decode_step(
+    x: jax.Array,   # (B, 1, H, P)
+    dt: jax.Array,  # (B, 1, H)
+    A: jax.Array,   # (H,)
+    Bm: jax.Array,  # (B, 1, G, N)
+    Cm: jax.Array,  # (B, 1, G, N)
+    h: jax.Array,   # (B, H, P, N) carried state
+    D: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token state update (serve path); pure jnp, O(state)."""
+    y, h_new = _ref.ssd_ref(x, dt, A, Bm, Cm, D, h0=h, return_state=True)
+    return y, h_new

@@ -1,0 +1,265 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth: kernel tests sweep shapes/dtypes and
+assert allclose against these.  They are also the XLA path the models use
+on non-TPU platforms (and what the multi-pod dry-run lowers).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.kernel_ref import MEM_BIAS, MEM_SCALE
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- taskbench
+def taskbench_compute_ref(tiles: jax.Array, iterations: int) -> jax.Array:
+    """(W, 8, 128) f32 tiles -> same, after `iterations` of a*a - a."""
+
+    def step(_, a):
+        return a * a - a
+
+    return jax.lax.fori_loop(0, iterations, step, tiles)
+
+
+def taskbench_memory_ref(x: jax.Array, iterations: int, span: int) -> jax.Array:
+    """(size,) f32 scratch; window k%nwin updated per iteration."""
+    size = x.shape[0]
+    assert size % span == 0
+    nwin = size // span
+
+    def step(k, st):
+        w = (k % nwin) * span
+        win = jax.lax.dynamic_slice(st, (w,), (span,))
+        return jax.lax.dynamic_update_slice(st, win * MEM_SCALE + MEM_BIAS, (w,))
+
+    return jax.lax.fori_loop(0, iterations, step, x)
+
+
+# ------------------------------------------------------------ attention
+def attention_ref(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Skv, Hkv, D)
+    v: jax.Array,  # (B, Skv, Hkv, D)
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding window size (None = full)
+    q_offset=0,  # absolute position of q[0]; int or traced scalar
+    kv_positions: Optional[jax.Array] = None,  # (Skv,) absolute key positions
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Grouped-query softmax attention oracle, fp32 accumulation.
+
+    ``window=w`` allows key j for query i iff i - w < j <= i (Mistral SWA).
+    ``kv_positions`` supports ring-buffer caches: keys carry arbitrary
+    absolute positions; negative positions are treated as invalid slots.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+
+    qs = q * jnp.asarray(scale, q.dtype)
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    if kv_positions is None:
+        kpos = jnp.arange(Skv)[None, :]
+    else:
+        kpos = kv_positions[None, :]
+    mask = kpos >= 0
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+
+    # Two GQA layouts (§Perf log):
+    #  * decode (Sq==1): grouped einsum over un-repeated K/V — an 8x repeat
+    #    of a 32k-token cache would dominate decode memory; heads stay
+    #    replicated in decode (the cache is sequence-sharded), so the
+    #    (Hkv, group) split costs nothing.
+    #  * train/prefill: bf16 repeat to full heads.  The repeat fuses into
+    #    the dot and keeps the head dim shardable over `model` — the
+    #    grouped layout would split H into (Hkv, group), neither of which
+    #    divides the mesh, forcing the partitioner to replicate fp32
+    #    logits (measured: ~70% of the baseline collective bytes).
+    # fp32 accumulation happens inside the dots; softmax stays fp32.
+    if Sq == 1:
+        qg = qs.reshape(B, Sq, Hkv, group, D)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                            preferred_element_type=jnp.float32)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+    kf = jnp.repeat(k, group, axis=2)
+    vf = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qs, kf,
+                        preferred_element_type=jnp.float32)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), vf,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def attention_ref_chunked(
+    q, k, v, causal=True, window=None, q_offset=0, kv_positions=None,
+    scale=None, q_chunk: int = 1024,
+):
+    """Memory-bounded oracle: sequential map over query chunks.
+
+    Peak logits footprint is (B, H, q_chunk, Skv) instead of (B, H, Sq, Skv)
+    — the XLA-path answer to 32k+ prefills (the Pallas kernel handles this
+    by tiling on TPU; inference-only, so no scan-residual blowup).
+    """
+    B, Sq, Hq, D = q.shape
+    q_chunk = min(q_chunk, Sq)
+    if Sq % q_chunk:
+        q_chunk = Sq  # irregular sizes: fall back to one chunk
+    nq = Sq // q_chunk
+    qs = q.reshape(B, nq, q_chunk, Hq, D)
+
+    def one(i):
+        return attention_ref(
+            qs[:, i], k, v, causal=causal, window=window,
+            q_offset=q_offset + i * q_chunk, kv_positions=kv_positions,
+            scale=scale,
+        )
+
+    out = jax.lax.map(one, jnp.arange(nq))  # (nq, B, qc, H, D)
+    return jnp.moveaxis(out, 0, 1).reshape(B, Sq, Hq, D)
+
+
+# ------------------------------------------------------------------- SSD
+def ssd_ref(
+    x: jax.Array,   # (B, S, H, P)   inputs (already multiplied by nothing)
+    dt: jax.Array,  # (B, S, H)      softplus'd step sizes, > 0
+    A: jax.Array,   # (H,)           negative decay rates
+    Bm: jax.Array,  # (B, S, G, N)   input projections (groups like GQA)
+    Cm: jax.Array,  # (B, S, G, N)   output projections
+    D: Optional[jax.Array] = None,  # (H,) skip
+    h0: Optional[jax.Array] = None,  # (B, H, P, N) initial state
+    return_state: bool = False,
+):
+    """Mamba-2 SSD oracle: sequential scan over time, fp32 state.
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t * (x_t outer B_t);  y_t = C_t . h_t + D x_t
+    """
+    Bsz, S, H, Pdim = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert H % G == 0
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)  # (B,S,H,N)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, Pdim, N), jnp.float32)
+    else:
+        h0 = h0.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        da = jnp.exp(dtt * Af[None])  # (B,H)
+        dbx = jnp.einsum("bhp,bhn->bhpn", xt * dtt[..., None], bt)
+        h = da[..., None, None] * h + dbx
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B,S,H,P)
+    if D is not None:
+        y = y + xf * D.astype(jnp.float32)[None, None, :, None]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, hT
+    return y
+
+
+def ssd_chunked_ref(
+    x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array, Cm: jax.Array,
+    D: Optional[jax.Array] = None, chunk: int = 64,
+    h0: Optional[jax.Array] = None, return_state: bool = False,
+):
+    """Matmul-form chunked SSD (the algorithm the Pallas kernel implements).
+
+    Splits S into chunks; intra-chunk contribution is a masked matmul
+    (MXU-friendly), inter-chunk state is a short scan over chunk summaries.
+    Mathematically identical to ssd_ref (same fp32 accumulation).
+    """
+    Bsz, S, H, Pdim = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    assert S % chunk == 0
+    nc = S // chunk
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, chunk, H, Pdim)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, chunk, H)
+    Af = A.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2).reshape(Bsz, nc, chunk, H, N)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2).reshape(Bsz, nc, chunk, H, N)
+
+    # per-position log decay within chunk: a_t = dt_t * A  (negative)
+    la = dtf * Af[None, None, None]  # (B,nc,Q,H)
+    cum = jnp.cumsum(la, axis=2)  # inclusive cumsum over chunk positions
+
+    # intra-chunk: y_i += sum_{j<=i} C_i.B_j exp(cum_i - cum_j) dt_j x_j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    idx = jnp.arange(chunk)
+    causal = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    decay = jnp.where(causal, jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", Cf, Bf)
+    scores = cb * decay  # (B,nc,Qi,Qj,H)
+    xdt = xf * dtf[..., None]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xdt)
+
+    # chunk state summaries: S_c = sum_j exp(cum_last - cum_j) dt_j B_j^T x_j
+    last = cum[:, :, -1:, :]  # (B,nc,1,H)
+    tail = jnp.exp(last - cum)  # (B,nc,Q,H)
+    states = jnp.einsum("bcjhn,bcjhp->bchpn", Bf * (tail * dtf)[..., None], xf)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(last[:, :, 0, :])  # (B,nc,H)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, Pdim, N), jnp.float32)
+    else:
+        h0 = h0.astype(jnp.float32)
+
+    def step(h, inp):
+        s_c, d_c = inp  # (B,H,P,N), (B,H)
+        h_in = h  # state entering this chunk
+        h = d_c[..., None, None] * h + s_c
+        return h, h_in
+
+    hT, h_ins = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_ins = jnp.moveaxis(h_ins, 0, 1)  # (B,nc,H,P,N) state entering chunk
+
+    # inter-chunk output: y_i += C_i exp(cum_i) h_in
+    inter_decay = jnp.exp(cum)  # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", Cf * inter_decay[..., None], h_ins)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, Pdim)
+    if D is not None:
+        y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, hT
+    return y

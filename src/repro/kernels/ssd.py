@@ -1,0 +1,138 @@
+"""Mamba-2 SSD (state-space duality) chunked kernel, Pallas TPU.
+
+Implements the matmul-form SSD algorithm (Dao & Gu, arXiv:2405.21060) the
+way a TPU wants it: the sequence is split into chunks of ``chunk``
+positions; intra-chunk work is three MXU matmuls over (chunk x chunk) and
+(chunk x state) tiles staged in VMEM, and the inter-chunk recurrence is a
+scalar-decay update on a persistent (headdim x state) VMEM scratch carried
+across the sequential chunk grid dimension.
+
+Grid: (batch, heads, n_chunks) — chunks minor-most so the state scratch
+walks the sequence in order.  The cumulative within-chunk log-decay is
+computed with a lower-triangular matmul (MXU) rather than a serial cumsum.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,   # (1, Q, 1, P)
+    dt_ref,  # (1, Q, 1)
+    a_ref,   # (1,)
+    b_ref,   # (1, Q, 1, N)
+    c_ref,   # (1, Q, 1, N)
+    y_ref,   # (1, Q, 1, P) out
+    hT_ref,  # (1, 1, P, N) out (final state)
+    h_ref,   # VMEM scratch (P, N) f32
+    *,
+    chunk: int,
+    num_chunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)    # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)     # (Q,)
+    a = a_ref[0].astype(jnp.float32)             # scalar
+    b = b_ref[0, :, 0, :].astype(jnp.float32)    # (Q, N)
+    c = c_ref[0, :, 0, :].astype(jnp.float32)    # (Q, N)
+
+    la = dt * a  # (Q,) negative log-decays
+    # inclusive cumsum via lower-triangular matmul (MXU-friendly)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    cum = jax.lax.dot_general(
+        tri.astype(jnp.float32), la, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (Q,)
+
+    # intra-chunk: scores[i,j] = (c_i . b_j) * exp(cum_i - cum_j) for j <= i
+    seg = cum[:, None] - cum[None, :]
+    decay = jnp.where(tri, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q)
+    xdt = x * dt[:, None]
+    y = jax.lax.dot_general(
+        cb * decay, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (Q, P)
+
+    # inter-chunk: y += (c * exp(cum)) @ h_prev^T
+    h = h_ref[...]  # (P, N)
+    c_in = c * jnp.exp(cum)[:, None]
+    y += jax.lax.dot_general(
+        c_in, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # state update: h = exp(cum[-1]) * h + x^T @ (b * (exp(cum[-1]-cum)*dt))
+    tail = jnp.exp(cum[chunk - 1] - cum) * dt  # (Q,)
+    b_in = b * tail[:, None]
+    h_new = jnp.exp(cum[chunk - 1]) * h + jax.lax.dot_general(
+        x, b_in, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (P, N)
+    h_ref[...] = h_new
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == num_chunks - 1)
+    def _final():
+        hT_ref[0, 0] = h_new
+
+
+def ssd_chunked(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,   # (H,)
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+    D: Optional[jax.Array] = None,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final state (B,H,P,N)); zero initial state."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert H % G == 0
+    rep = H // G
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, num_chunks=nc)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, ic: (b, ic, h)),
+            pl.BlockSpec((1,), lambda b, h, ic: (h,)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, ic: (b, ic, h // rep, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, ic: (b, ic, h // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    if D is not None:
+        y = (y.astype(jnp.float32)
+             + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+             ).astype(x.dtype)
+    return y, hT

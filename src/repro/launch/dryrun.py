@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh from placeholder host
+devices, constructs abstract inputs (ShapeDtypeStruct — no allocation),
+lowers the real jitted step (train_step for train shapes, serve_step for
+decode shapes, forward for prefill), compiles it, and records
+``memory_analysis()`` / ``cost_analysis()`` / per-collective byte counts.
+
+Results accumulate incrementally in a JSON cache (one entry per cell x
+mesh x strategy) so interrupted sweeps resume; ``--force`` recomputes.
+
+Usage:
+  python -m repro.launch.dryrun                     # full sweep, both meshes
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --strategy dp_only  # naive baseline (§Perf)
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ALL_ARCHS, SHAPES, get_config, shape_applicable
+from ..dist.sharding import make_rules, use_rules
+from ..launch import specs as SP
+from ..launch.mesh import make_production_mesh
+from ..launch.roofline import analyze_hlo
+from ..models import model as M
+from ..optim import adamw
+from ..serve.engine import serve_step
+from ..train import train_step as TS
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "results", "dryrun.json")
+
+
+def _mesh_name(multi_pod: bool) -> str:
+    return "pod2x16x16" if multi_pod else "pod16x16"
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               strategy: str = "tp+fsdp+sp", overrides=None,
+               accum: int = 0):
+    """Returns a result dict for one cell (raises on lowering bugs)."""
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **{k: v for k, v in overrides.items()
+                                          if hasattr(cfg, k)})
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh, strategy=strategy)
+
+    t0 = time.time()
+    with mesh, use_rules(rules):
+        if shape.kind == "train":
+            accum = accum or SP.train_grad_accum(cfg, shape, mesh)
+            tcfg = TS.TrainConfig(
+                grad_accum=accum,
+                adamw=adamw.AdamWConfig(
+                    state_dtype=cfg.opt_state_dtype,
+                    master_weights=(cfg.opt_state_dtype == "float32"),
+                ),
+            )
+            state, state_axes = SP.state_struct(cfg, tcfg)
+            state_sh = SP.shardings_from_axes(state_axes, state, rules)
+            batch, batch_axes = SP.batch_struct(cfg, shape)
+            batch_sh = SP.shardings_from_axes(batch_axes, batch, rules)
+            fn = functools.partial(TS.train_step, cfg=cfg, tcfg=tcfg)
+            jitted = jax.jit(fn, donate_argnums=(0,),
+                             in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None))
+            lowered = jitted.lower(state, batch)
+            extra = {"grad_accum": accum}
+        elif shape.kind == "prefill":
+            params, axes = SP.params_struct(cfg)
+            params_sh = SP.shardings_from_axes(axes, params, rules)
+            batch, batch_axes = SP.batch_struct(cfg, shape)
+            batch_sh = SP.shardings_from_axes(batch_axes, batch, rules)
+
+            def prefill_fwd(p, b):
+                logits, _, _ = M.forward(p, cfg, tokens=b.get("tokens"),
+                                         embeds=b.get("embeds"),
+                                         last_token_only=True)
+                return jnp.argmax(logits[:, -1], axis=-1)
+
+            jitted = jax.jit(prefill_fwd, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params, batch)
+            extra = {}
+        else:  # decode / long_decode: one new token against a full cache
+            params, axes = SP.params_struct(cfg)
+            params_sh = SP.shardings_from_axes(axes, params, rules)
+            B = shape.global_batch
+            caches, cache_axes = SP.caches_struct(cfg, B, shape.seq_len)
+            if isinstance(caches, list):
+                caches_sh = [SP.shardings_from_axes(a, c, rules)
+                             for a, c in zip(cache_axes, caches)]
+            else:  # stacked (scanned models): single LayerCache pytree
+                caches_sh = SP.shardings_from_axes(cache_axes, caches, rules)
+            toks = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            toks_sh = rules.sharding_for(("batch", None), (B, 1))
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = functools.partial(serve_step, cfg=cfg)
+            jitted = jax.jit(fn, donate_argnums=(2,),
+                             in_shardings=(params_sh, toks_sh, caches_sh, None),
+                             out_shardings=(toks_sh, caches_sh))
+            lowered = jitted.lower(params, toks, caches, pos)
+            extra = {}
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    analysis = analyze_hlo(compiled.as_text())
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": _mesh_name(multi_pod),
+        "strategy": strategy, "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        # loop-aware per-device totals (launch.roofline.analyze_hlo)
+        "flops_per_device": analysis["flops"],
+        "hbm_bytes_per_device": analysis["hbm_bytes"],
+        "collectives": analysis["collectives"],
+        "unknown_trip_whiles": analysis["unknown_trip_whiles"],
+        # XLA's own (loop-unaware) numbers, for reference
+        "xla_cost_flops": cost.get("flops", 0.0),
+        "xla_cost_bytes": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_gb": mem.argument_size_in_bytes / 1e9,
+            "output_gb": mem.output_size_in_bytes / 1e9,
+            "temp_gb": mem.temp_size_in_bytes / 1e9,
+            "alias_gb": mem.alias_size_in_bytes / 1e9,
+        },
+        **extra,
+    }
+    return result
+
+
+def cell_key(r) -> str:
+    return f"{r['arch']}|{r['shape']}|{r['mesh']}|{r['strategy']}"
+
+
+def load_results(path):
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(path, results):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ALL_ARCHS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--strategy", default="tp+fsdp+sp")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_PATH))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--accum", type=int, default=0,
+                    help="override gradient-accumulation steps (train cells)")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ALL_ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = load_results(args.out)
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            runnable, why = shape_applicable(cfg, SHAPES[shape_name])
+            for mp in meshes:
+                key = f"{arch}|{shape_name}|{_mesh_name(mp)}|{args.strategy}"
+                if key in results and not args.force \
+                        and results[key].get("status") in ("ok", "skip"):
+                    print(f"[cached] {key}")
+                    continue
+                if not runnable:
+                    results[key] = {
+                        "arch": arch, "shape": shape_name,
+                        "mesh": _mesh_name(mp), "strategy": args.strategy,
+                        "status": "skip", "reason": why,
+                    }
+                    save_results(args.out, results)
+                    print(f"[skip]   {key}: {why}")
+                    continue
+                print(f"[lower]  {key} ...", flush=True)
+                try:
+                    r = lower_cell(arch, shape_name, mp, args.strategy,
+                                   accum=args.accum)
+                    results[key] = r
+                    print(f"[ok]     {key}: compile {r['compile_s']}s "
+                          f"args {r['memory']['argument_gb']:.2f}GB "
+                          f"temp {r['memory']['temp_gb']:.2f}GB")
+                except Exception as e:  # record the failure, keep sweeping
+                    results[key] = {
+                        "arch": arch, "shape": shape_name,
+                        "mesh": _mesh_name(mp), "strategy": args.strategy,
+                        "status": "error", "error": str(e)[:2000],
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    print(f"[FAIL]   {key}: {e}")
+                save_results(args.out, results)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,417 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds (TPU v5e targets):
+
+  compute    = per-device matmul FLOPs / 197 TF/s (bf16 peak)
+  memory     = per-device HBM-boundary bytes / 819 GB/s
+  collective = per-device collective bytes / 50 GB/s per ICI link
+
+``compiled.cost_analysis()`` does NOT expand ``while`` loops (scan over
+layers, gradient accumulation), so this module parses the optimized HLO
+text directly and walks the call graph, multiplying every computation's
+cost by the loop trip counts XLA annotates (``known_trip_count``):
+
+  * FLOPs: every ``dot`` (2*result_elems*K from the operand symbol table;
+    dots inside fusions included) and ``convolution`` (approximated from
+    window size); elementwise FLOPs are ignored (documented: matmul
+    roofline).
+  * HBM bytes: sum of operand+result bytes of every top-level instruction
+    that crosses the HBM boundary (fusion/dot/copy/reduce/...); fusion
+    internals excluded (they live in VMEM/registers).
+  * Collective bytes, per-device convention: all-gather/all-to-all/
+    collective-permute = result bytes; all-reduce = 2x result
+    (reduce-scatter + all-gather phases); reduce-scatter = operand bytes.
+
+Also reported: MODEL_FLOPS = 6*N_active*D and its ratio to compiled HLO
+FLOPs — the "useful compute" fraction exposing remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# -------------------------------------------------- hardware constants
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NO_TRAFFIC_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^()]*\)|[\w\[\],{}\d ]+?))\s*"
+    r"([\w\-]+)\(")
+
+
+def _parse_computations(hlo: str):
+    """-> (comps: name -> [Instr], entry_name)."""
+    comps: Dict[str, List[_Instr]] = {}
+    cur: Optional[str] = None
+    header = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\{\s*$")
+    entry = None
+    for line in hlo.splitlines():
+        if not line.startswith(" "):
+            m = header.match(line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[cur].append(_Instr(m.group(1), m.group(2).strip(),
+                                     m.group(3), line))
+    return comps, entry
+
+
+def _operands(instr: _Instr) -> List[str]:
+    """Operand %names of an instruction line."""
+    inner = instr.line.split(instr.op + "(", 1)[1]
+    # cut at the matching close paren (operands never nest parens)
+    depth, out, cur = 1, [], ""
+    for ch in inner:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        cur += ch
+    args = cur.split(",")
+    names = []
+    for a in args:
+        a = a.strip()
+        if a.startswith("%"):
+            names.append(a[1:])
+        else:
+            m = re.search(r"%([\w\.\-]+)", a)
+            if m:
+                names.append(m.group(1))
+    return names
+
+
+def _dot_flops(instr: _Instr, symtab: Dict[str, str]) -> float:
+    result_elems = 1
+    for d in _shape_dims(instr.type_str):
+        result_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+    ops = _operands(instr)
+    if not m or not ops or ops[0] not in symtab:
+        return 2.0 * result_elems  # degenerate
+    lhs_dims = _shape_dims(symtab[ops[0]])
+    k = 1
+    for idx in m.group(1).split(","):
+        if idx and int(idx) < len(lhs_dims):
+            k *= lhs_dims[int(idx)]
+    return 2.0 * result_elems * k
+
+
+def _conv_flops(instr: _Instr, symtab: Dict[str, str]) -> float:
+    result_elems = 1
+    for d in _shape_dims(instr.type_str):
+        result_elems *= d
+    m = re.search(r"window=\{size=([\dx]+)", instr.line)
+    window = 1
+    if m:
+        for d in m.group(1).split("x"):
+            window *= int(d)
+    # depthwise convs (feature_group_count=C) contract only the window
+    ops = _operands(instr)
+    in_feat = 1
+    gm = re.search(r"feature_group_count=(\d+)", instr.line)
+    groups = int(gm.group(1)) if gm else 1
+    if len(ops) > 1 and ops[1] in symtab:
+        kdims = _shape_dims(symtab[ops[1]])
+        if len(kdims) >= 2:
+            in_feat = kdims[-2]  # HIO layout: input features dim
+    return 2.0 * result_elems * window * max(in_feat // max(groups, 1), 1)
+
+
+@dataclass
+class HLOCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    attn_sq_bytes: float = 0.0  # traffic of (.., S, S) attention tensors
+    collectives: Dict[str, float] = field(default_factory=dict)
+
+    def scaled(self, k: float) -> "HLOCost":
+        return HLOCost(self.flops * k, self.hbm_bytes * k,
+                       self.attn_sq_bytes * k,
+                       {kk: v * k for kk, v in self.collectives.items()})
+
+    def add(self, other: "HLOCost"):
+        self.flops += other.flops
+        self.hbm_bytes += other.hbm_bytes
+        self.attn_sq_bytes += other.attn_sq_bytes
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v
+
+
+def _is_attn_quadratic(type_str: str) -> bool:
+    """rank>=3 tensor containing two equal dims >= 1024 — the (B, H, S, S)
+    logits/probs family.  The Pallas flash-attention kernel keeps these in
+    VMEM tiles; in the XLA reference lowering they cross HBM at every
+    fusion boundary, so their traffic is reported separately."""
+    dims = _shape_dims(type_str)
+    if len(dims) < 3:
+        return False
+    big = [d for d in dims if d >= 1024]
+    return any(big.count(d) >= 2 for d in set(big))
+
+
+def _collective_kind(op: str) -> Optional[str]:
+    base = op.replace("-start", "")
+    return base if base in COLLECTIVE_KINDS else None
+
+
+def analyze_hlo(hlo: str) -> Dict:
+    """Loop-aware {flops, hbm_bytes, collectives{kind: bytes}, unknown_trips}."""
+    comps, entry = _parse_computations(hlo)
+    if entry is None:
+        entry = next(iter(comps), None)
+    symtabs = {
+        name: {i.name: i.type_str for i in instrs}
+        for name, instrs in comps.items()
+    }
+    # add parameter types (they match _INSTR_RE with op 'parameter')
+    fusion_flops_memo: Dict[str, float] = {}
+    unknown_trips = [0]
+
+    def fusion_flops(name: str, depth=0) -> float:
+        """dots inside fusion computations still hit the MXU."""
+        if name in fusion_flops_memo:
+            return fusion_flops_memo[name]
+        if name not in comps or depth > 40:
+            return 0.0
+        fusion_flops_memo[name] = 0.0
+        total = 0.0
+        for i in comps[name]:
+            if i.op == "dot":
+                total += _dot_flops(i, symtabs[name])
+            elif i.op == "convolution":
+                total += _conv_flops(i, symtabs[name])
+            elif i.op == "fusion":
+                m = re.search(r"calls=%([\w\.\-]+)", i.line)
+                if m:
+                    total += fusion_flops(m.group(1), depth + 1)
+        fusion_flops_memo[name] = total
+        return total
+
+    memo: Dict[str, HLOCost] = {}
+
+    def visit(name: str, depth=0) -> HLOCost:
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 60:
+            return HLOCost()
+        memo[name] = HLOCost()  # cycle guard
+        acc = HLOCost()
+        symtab = symtabs[name]
+        for i in comps[name]:
+            kind = _collective_kind(i.op)
+            if kind:
+                rbytes = _shape_bytes(i.type_str)
+                if kind == "all-reduce":
+                    cbytes = 2.0 * rbytes
+                elif kind == "reduce-scatter":
+                    cbytes = sum(_shape_bytes(symtab.get(o, ""))
+                                 for o in _operands(i)) or rbytes
+                else:
+                    cbytes = rbytes
+                acc.collectives[kind] = acc.collectives.get(kind, 0.0) + cbytes
+                acc.hbm_bytes += rbytes
+                continue
+            if i.op == "dot":
+                acc.flops += _dot_flops(i, symtab)
+            elif i.op == "convolution":
+                acc.flops += _conv_flops(i, symtab)
+            elif i.op == "fusion":
+                m = re.search(r"calls=%([\w\.\-]+)", i.line)
+                if m:
+                    acc.flops += fusion_flops(m.group(1))
+            elif i.op == "while":
+                trip = 1
+                m = re.search(r'known_trip_count[^0-9]*(\d+)', i.line)
+                if m:
+                    trip = int(m.group(1))
+                else:
+                    unknown_trips[0] += 1
+                bm = re.search(r"body=%([\w\.\-]+)", i.line)
+                if bm:
+                    acc.add(visit(bm.group(1), depth + 1).scaled(trip))
+                continue
+            elif i.op == "conditional":
+                for m in re.finditer(
+                        r"(?:true_computation|false_computation)=%([\w\.\-]+)",
+                        i.line):
+                    acc.add(visit(m.group(1), depth + 1))
+                bm = re.search(r"branch_computations=\{([^}]*)\}", i.line)
+                if bm:
+                    for nm in bm.group(1).split(","):
+                        acc.add(visit(nm.strip().lstrip("%"), depth + 1))
+            elif i.op in ("call", "async-start"):
+                m = re.search(r"(?:to_apply|called_computation)=%([\w\.\-]+)",
+                              i.line)
+                if m:
+                    acc.add(visit(m.group(1), depth + 1))
+            # HBM traffic: operands + result of boundary-crossing ops
+            if i.op not in _NO_TRAFFIC_OPS:
+                b = _shape_bytes(i.type_str)
+                quad = _is_attn_quadratic(i.type_str)
+                for o in _operands(i):
+                    ts = symtab.get(o, "")
+                    b += _shape_bytes(ts)
+                    quad = quad or _is_attn_quadratic(ts)
+                acc.hbm_bytes += b
+                if quad:
+                    acc.attn_sq_bytes += b
+        memo[name] = acc
+        return acc
+
+    total = visit(entry) if entry else HLOCost()
+    colls = dict(total.collectives)
+    colls["total"] = float(sum(total.collectives.values()))
+    return {
+        "flops": float(total.flops),
+        "hbm_bytes": float(total.hbm_bytes),
+        "attn_sq_bytes": float(total.attn_sq_bytes),
+        "collectives": colls,
+        "unknown_trip_whiles": unknown_trips[0],
+    }
+
+
+def collective_bytes_by_kind(hlo: str) -> Dict[str, float]:
+    return analyze_hlo(hlo)["collectives"]
+
+
+# ------------------------------------------------------------- terms
+def model_flops(cfg, shape) -> float:
+    """Useful model FLOPs for the step: 6*N_active*tokens (train),
+    2*N_active*tokens (prefill), 2*N_active*batch (decode)."""
+    n_active = cfg.params_active
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch
+
+
+def model_bytes(cfg, shape) -> float:
+    """Useful HBM traffic for one decode step: every active parameter is
+    read once (weights dominate batched decode) plus the KV/state cache."""
+    param_bytes = 2.0 * cfg.params_active  # bf16
+    cache = 0.0
+    for kind in cfg.pattern_for_depth():
+        if kind in ("attn", "moe"):
+            w = cfg.window or shape.seq_len
+        elif kind == "local_attn":
+            w = cfg.local_window or shape.seq_len
+        elif kind == "ssd":
+            d_in = cfg.ssm_expand * cfg.d_model
+            cache += (d_in // cfg.ssm_headdim) * cfg.ssm_headdim \
+                * cfg.ssm_state * 4.0 * shape.global_batch
+            continue
+        elif kind == "rglru":
+            cache += (cfg.lru_width or cfg.d_model) * 4.0 * shape.global_batch
+            continue
+        else:
+            continue
+        w = min(w, shape.seq_len)
+        cache += (2 * w * cfg.num_kv_heads * cfg.head_dim * 2.0
+                  * shape.global_batch)
+    return param_bytes + cache
+
+
+def roofline_terms(analysis: Dict, cfg, shape, chips: int) -> Dict:
+    flops_dev = float(analysis.get("flops", 0.0))
+    bytes_dev = float(analysis.get("hbm_bytes", 0.0))
+    coll_dev = float(analysis.get("collectives", {}).get("total", 0.0))
+    attn_sq = float(analysis.get("attn_sq_bytes", 0.0))
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    # on the TPU target the Pallas flash-attention kernel keeps the
+    # (B,H,S,S) logits family in VMEM; the dry-run lowers the XLA
+    # reference, so its quadratic traffic is removed from the memory term
+    # (raw value still reported as memory_s_raw)
+    memory_flash_s = max(bytes_dev - attn_sq, 0.0) / HBM_BW
+    coll_s = coll_dev / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_flash_s,
+             "collective_s": coll_s}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_total = flops_dev * chips
+    bound = max(terms.values())
+    out = {
+        **terms,
+        "memory_s_raw": memory_s,
+        "attn_sq_bytes": attn_sq,
+        "dominant": dom,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": (mf / hlo_total) if hlo_total else 0.0,
+        "bound_step_s": bound,
+        # fraction of the machine's peak the useful FLOPs achieve when the
+        # step runs at its binding roofline term
+        "roofline_fraction": (mf / bound / (chips * PEAK_FLOPS)
+                              if bound > 0 else 0.0),
+    }
+    if shape.kind in ("decode", "long_decode"):
+        # decode is bandwidth-limited by construction: score useful HBM
+        # traffic (weights + cache, read once) against the machine's HBM
+        ub = model_bytes(cfg, shape)
+        out["useful_bytes"] = ub
+        out["bw_fraction"] = (ub / bound / (chips * HBM_BW)
+                              if bound > 0 else 0.0)
+        out["roofline_fraction"] = out["bw_fraction"]
+    return out

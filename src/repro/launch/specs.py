@@ -1,0 +1,108 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every dry-run cell.
+
+``cell_specs(arch, shape, mesh)`` returns everything needed to lower a
+cell without allocating a single byte: abstract train state / params /
+batch / caches plus their NamedShardings (derived from the logical-axes
+trees through the divisibility-fallback rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, InputShape, get_config
+from ..dist.sharding import ShardingRules, make_rules
+from ..models import model as M
+from ..models.cache import cache_logical_axes, init_caches
+from ..models.layers import split_leaves
+from ..optim import adamw
+from ..train import train_step as TS
+
+AXES_LEAF = lambda x: isinstance(x, tuple) and all(
+    isinstance(e, (str, type(None))) for e in x)
+
+
+def shardings_from_axes(axes_tree, struct_tree, rules: ShardingRules):
+    """logical-axes tree + abstract value tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda ax, s: rules.sharding_for(ax, s.shape),
+        axes_tree, struct_tree, is_leaf=AXES_LEAF)
+
+
+def batch_struct(cfg, shape: InputShape) -> Tuple[Dict, Dict]:
+    """(struct, logical axes) for one training/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend:
+        return (
+            {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+             "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)},
+            {"embeds": ("batch", "seq", None), "labels": ("batch", "seq")},
+        )
+    return (
+        {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+         "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)},
+        {"tokens": ("batch", "seq"), "labels": ("batch", "seq")},
+    )
+
+
+def state_struct(cfg, tcfg: TS.TrainConfig):
+    """(abstract TrainState, logical-axes TrainState) via eval_shape."""
+    def build(key):
+        state, _ = TS.init_state(key, cfg, tcfg)
+        return state
+
+    state = jax.eval_shape(build, jax.random.PRNGKey(0))
+    # rebuild the axes tree (host-side, cheap)
+    leaf_tree = jax.eval_shape(
+        functools.partial(M.init_model, cfg=cfg), jax.random.PRNGKey(0))
+    _, axes = split_leaves(leaf_tree)
+    axes_state = TS.TrainState(
+        step=(),
+        params=axes,
+        opt=adamw.state_logical_axes(state.opt, axes),
+    )
+    return state, axes_state
+
+
+def params_struct(cfg):
+    leaf_tree = jax.eval_shape(
+        functools.partial(M.init_model, cfg=cfg), jax.random.PRNGKey(0))
+    return split_leaves(leaf_tree)
+
+
+def caches_struct(cfg, batch: int, max_len: int):
+    """(abstract caches, matching logical axes).
+
+    Scanned homogeneous stacks get a single stacked LayerCache (leading
+    layer dim, rides the decode scan carry — in-place updates, no unstack
+    copies); heterogeneous stacks get the per-layer list."""
+    caches = jax.eval_shape(
+        lambda: init_caches(cfg, batch, max_len, dtype=jnp.bfloat16))
+    if cfg.scan_layers and len(set(cfg.pattern_for_depth())) == 1:
+        stacked = jax.eval_shape(
+            lambda *cs: jax.tree.map(lambda *xs: jnp.stack(xs), *cs), *caches)
+        ax = cache_logical_axes(caches[0])
+        axes = jax.tree.map(
+            lambda a: (None,) + tuple(a), ax,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+        return stacked, axes
+    axes = [cache_logical_axes(c) for c in caches]
+    return caches, axes
+
+
+def decode_grad_accum(cfg, shape: InputShape, mesh) -> int:
+    return 1
+
+
+def train_grad_accum(cfg, shape: InputShape, mesh) -> int:
+    """Pick microbatching so per-device microbatch stays small (<=4)."""
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    b_loc = max(1, shape.global_batch // dp)
+    return max(1, b_loc // 4)

@@ -1,0 +1,114 @@
+"""Decode-cache construction per block kind.
+
+``LayerCache`` is a pytree dataclass whose ``kind`` is static metadata:
+  full  — (B, max_len, Hkv, Dh) K/V, for full-attention layers
+  ring  — (B, W, Hkv, Dh) sliding-window ring buffer (SWA / local attention)
+  ssm   — Mamba-2 conv tail + (B, H, P, N) SSD state
+  rglru — conv tail + (B, w) recurrent state
+
+Fixed-window layers get ring buffers whenever the window is smaller than
+the nominal cache length — this is what bounds the ``long_500k`` working
+set for the sub-quadratic architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class LayerCache:
+    kind: str  # static
+    k: Any = None
+    v: Any = None
+    pos: Any = None
+    conv_x: Any = None
+    conv_bc: Any = None
+    state: Any = None
+    conv: Any = None
+    h: Any = None
+
+
+jax.tree_util.register_dataclass(
+    LayerCache,
+    data_fields=["k", "v", "pos", "conv_x", "conv_bc", "state", "conv", "h"],
+    meta_fields=["kind"],
+)
+
+
+def init_layer_cache(kind: str, cfg, batch: int, max_len: int, dtype) -> LayerCache:
+    if kind == "ssd":
+        from .ssm import _dims
+
+        d_in, H, G, N = _dims(cfg)
+        K = cfg.ssm_conv
+        return LayerCache(
+            kind="ssm",
+            conv_x=jnp.zeros((batch, K - 1, d_in), dtype),
+            conv_bc=jnp.zeros((batch, K - 1, 2 * G * N), dtype),
+            state=jnp.zeros((batch, H, cfg.ssm_headdim, N), jnp.float32),
+        )
+    if kind == "rglru":
+        w = cfg.lru_width or cfg.d_model
+        return LayerCache(
+            kind="rglru",
+            conv=jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype),
+            h=jnp.zeros((batch, w), jnp.float32),
+        )
+    if kind in ("attn", "moe"):
+        window = cfg.window
+    elif kind == "local_attn":
+        window = cfg.local_window
+    else:
+        raise ValueError(kind)
+    Hkv, Dh = cfg.num_kv_heads, cfg.head_dim
+    if window is not None and window < max_len:
+        return LayerCache(
+            kind="ring",
+            k=jnp.zeros((batch, window, Hkv, Dh), dtype),
+            v=jnp.zeros((batch, window, Hkv, Dh), dtype),
+            pos=jnp.zeros((), jnp.int32),
+        )
+    return LayerCache(
+        kind="full",
+        k=jnp.zeros((batch, max_len, Hkv, Dh), dtype),
+        v=jnp.zeros((batch, max_len, Hkv, Dh), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_caches(cfg, batch: int, max_len: int, dtype=None) -> List[LayerCache]:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return [
+        init_layer_cache(kind, cfg, batch, max_len, dtype)
+        for kind in cfg.pattern_for_depth()
+    ]
+
+
+def cache_logical_axes(cache: LayerCache) -> LayerCache:
+    """Logical sharding axes per leaf (same treedef as the cache)."""
+    kind = cache.kind
+    if kind in ("full", "ring"):
+        return LayerCache(
+            kind=kind,
+            k=("batch", "kv_seq", "kv_heads_act", None),
+            v=("batch", "kv_seq", "kv_heads_act", None),
+            pos=(),
+        )
+    if kind == "ssm":
+        return LayerCache(
+            kind=kind,
+            conv_x=("batch", None, "ssm_inner"),
+            conv_bc=("batch", None, None),
+            state=("batch", "ssm_heads", None, None),
+        )
+    if kind == "rglru":
+        return LayerCache(
+            kind=kind,
+            conv=("batch", None, "lru"),
+            h=("batch", "lru"),
+        )
+    raise ValueError(kind)

@@ -1,0 +1,290 @@
+"""Common model layers: pure-function init/apply over param dicts.
+
+Convention: every ``init_*`` returns a pytree whose leaves are
+``Leaf(value, axes)`` — the array plus its logical-axis names.  The model
+splits this into a param tree and an axes tree (see ``split_leaves``); the
+axes tree drives sharding (dist.sharding) and stays host-side.
+
+All matmuls run in the param dtype (bf16 by default) with fp32 accumulation
+via ``preferred_element_type``; norms and softmax in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import constrain
+from ..kernels import ops
+from .cache import LayerCache
+
+
+@dataclasses.dataclass
+class Leaf:
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+# pytree node (axes static) so jax.eval_shape can trace init_model directly
+jax.tree_util.register_dataclass(Leaf, data_fields=["value"], meta_fields=["axes"])
+
+
+def is_leaf(x) -> bool:
+    return isinstance(x, Leaf)
+
+
+def split_leaves(tree):
+    """Leaf tree -> (params tree, logical-axes tree)."""
+    params = jax.tree.map(lambda l: l.value, tree, is_leaf=is_leaf)
+    axes = jax.tree.map(lambda l: l.axes, tree, is_leaf=is_leaf)
+    return params, axes
+
+
+def _dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / np.sqrt(max(in_axis_size, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def matmul(x, w, ndim_contract: int = 1):
+    """x @ w contracting the last ndim_contract dims of x with the first of w."""
+    xc = tuple(range(x.ndim - ndim_contract, x.ndim))
+    wc = tuple(range(ndim_contract))
+    out = jax.lax.dot_general(
+        x, w, ((xc, wc), ((), ())), preferred_element_type=jnp.float32
+    )
+    return out.astype(x.dtype)
+
+
+def matmul_out(x, w, ndim_contract: int, *out_axes):
+    """Second-projection matmul (contracting a TP-sharded dim).
+
+    Two deliberate choices for the cross-device partial-sum reduction
+    (§Perf log H-a/H-c):
+      * the dot emits bf16 (each device's partial is still accumulated in
+        fp32 inside the MXU and rounded once), so the TP all-reduce moves
+        half the bytes of an fp32 reduction;
+      * the output is sharding-constrained to the residual layout before
+        any further op, which lets the TPU partitioner lower the reduction
+        as reduce-scatter straight into the sequence-sharded layout (the
+        CPU partitioner lacks RS and falls back to all-reduce — measured
+        and documented in EXPERIMENTS.md).
+    """
+    xc = tuple(range(x.ndim - ndim_contract, x.ndim))
+    wc = tuple(range(ndim_contract))
+    out = jax.lax.dot_general(
+        x, w, ((xc, wc), ((), ())), preferred_element_type=x.dtype
+    )
+    out = constrain(out, *out_axes)
+    return out
+
+
+# ---------------------------------------------------------------- norms
+def init_norm(d: int, dtype, kind: str = "rms", axes=("embed2",)) -> Dict:
+    p = {"scale": Leaf(jnp.ones((d,), dtype), axes)}
+    if kind == "layer":
+        p["bias"] = Leaf(jnp.zeros((d,), dtype), axes)
+    return p
+
+
+def apply_norm(p: Dict, x, kind: str = "rms", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta: float = 10000.0, mrope: bool = False):
+    """x: (B, S, H, D); positions: (B, S) int32.
+
+    ``mrope=True`` marks Qwen2-VL multimodal RoPE.  For the text-only
+    backbone (the modality frontend is a stub per the assignment), all three
+    M-RoPE position streams coincide, and M-RoPE reduces exactly to 1-D RoPE
+    applied in interleaved sections — numerically identical here, kept as a
+    flag for config fidelity (see DESIGN.md).
+    """
+    B, S, H, D = x.shape
+    freqs = rope_freqs(D, theta)  # (D/2,)
+    ang = positions.astype(jnp.float32)[:, :, None] * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]  # (B,S,1,D/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., : D // 2], xf[..., D // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ embeddings
+def init_embedding(key, vocab: int, d: int, dtype) -> Dict:
+    emb = (jax.random.normal(key, (vocab, d), jnp.float32)
+           / np.sqrt(d)).astype(dtype)
+    return {"table": Leaf(emb, ("vocab", "embed"))}
+
+
+def apply_embedding(p: Dict, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def apply_unembed(p: Dict, x):
+    """Logits via the (tied or dedicated) (vocab, d) table."""
+    return matmul(x, p["table"].T)
+
+
+# -------------------------------------------------------------- attention
+def init_attention(key, cfg) -> Dict:
+    d, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": Leaf(_dense_init(ks[0], (d, H, Dh), d, dt), ("embed", "heads", "head_dim")),
+        "wk": Leaf(_dense_init(ks[1], (d, Hkv, Dh), d, dt), ("embed", "kv_heads", "head_dim")),
+        "wv": Leaf(_dense_init(ks[2], (d, Hkv, Dh), d, dt), ("embed", "kv_heads", "head_dim")),
+        "wo": Leaf(_dense_init(ks[3], (H, Dh, d), H * Dh, dt), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = Leaf(jnp.zeros((H, Dh), dt), ("heads", "head_dim"))
+        p["bk"] = Leaf(jnp.zeros((Hkv, Dh), dt), ("kv_heads", "head_dim"))
+        p["bv"] = Leaf(jnp.zeros((Hkv, Dh), dt), ("kv_heads", "head_dim"))
+    return p
+
+
+def apply_attention(
+    p: Dict,
+    x,  # (B, S, d)
+    cfg,
+    positions,  # (B, S)
+    window: Optional[int] = None,
+    cache: Optional[Dict] = None,
+    kernel_impl: str = "auto",
+):
+    """GQA attention; returns (out, new_cache).
+
+    Cache kinds (see models.cache):
+      full cache: {"kind":"full", "k","v": (B, Smax, Hkv, Dh), "pos": scalar}
+      ring cache: {"kind":"ring", "k","v": (B, W, Hkv, Dh), "pos": scalar}
+        — fixed-size sliding-window buffer; slot = pos % W; absolute key
+          positions reconstructed from pos so masking stays exact.
+    """
+    B, S, d = x.shape
+    q = matmul(x, p["wq"])  # (B,S,H,Dh)
+    k = matmul(x, p["wk"])
+    v = matmul(x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope)
+    q = constrain(q, "batch", "seq_full", "act_heads", None)
+    k = constrain(k, "batch", "seq_full", "kv_heads_act", None)
+
+    new_cache = None
+    if cache is None:
+        out = ops.attention(
+            q, k, v, causal=cfg.causal, window=window, impl=kernel_impl
+        )
+    elif cache.kind == "full":
+        pos = cache.pos  # scalar int32: #tokens already cached
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, pos, 0, 0))
+        ck = constrain(ck, "batch", "kv_seq", "kv_heads_act", None)
+        cv = constrain(cv, "batch", "kv_seq", "kv_heads_act", None)
+        # slots beyond pos+S are zero/stale; causal mask with q_offset=pos
+        # blocks every j > pos+S-1 so they are never read.
+        out = ops.attention(
+            q, ck, cv, causal=True, window=window, q_offset=pos,
+            impl=kernel_impl,
+        )
+        new_cache = LayerCache(kind="full", k=ck, v=cv, pos=pos + S)
+    elif cache.kind == "ring" and S > 1:
+        # prefill: full-sequence windowed attention, then stash the last
+        # min(W, S) keys/values into the ring buffer for decode.
+        W = cache.k.shape[1]
+        out = ops.attention(
+            q, k, v, causal=cfg.causal, window=window, impl=kernel_impl
+        )
+        take = min(W, S)
+        slots = (jnp.arange(S - take, S, dtype=jnp.int32)) % W
+        ck = cache.k.at[:, slots].set(k[:, S - take:].astype(cache.k.dtype))
+        cv = cache.v.at[:, slots].set(v[:, S - take:].astype(cache.v.dtype))
+        new_cache = LayerCache(kind="ring", k=ck, v=cv, pos=cache.pos + S)
+    elif cache.kind == "ring":
+        W = cache.k.shape[1]
+        pos = cache.pos
+        slot = pos % W
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+        ck = constrain(ck, "batch", "kv_seq", "kv_heads_act", None)
+        cv = constrain(cv, "batch", "kv_seq", "kv_heads_act", None)
+        # slot s holds absolute position: largest p <= pos with p % W == s
+        slots = jnp.arange(W, dtype=jnp.int32)
+        kv_pos = pos - ((pos - slots) % W)  # in (pos-W, pos]
+        out = ops.attention(
+            q, ck, cv, causal=True, window=window, q_offset=pos,
+            kv_positions=kv_pos, impl=kernel_impl,
+        )
+        new_cache = LayerCache(kind="ring", k=ck, v=cv, pos=pos + 1)
+    else:
+        raise ValueError(cache.kind)
+
+    out = constrain(out, "batch", "seq_full", "act_heads", None)
+    y = matmul_out(out, p["wo"], 2, "batch", "seq", None)
+    return y, new_cache
+
+
+# -------------------------------------------------------------------- MLP
+def init_mlp(key, cfg, d_ff: Optional[int] = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_gated:
+        return {
+            "wi_gate": Leaf(_dense_init(ks[0], (d, f), d, dt), ("embed", "ffn")),
+            "wi_up": Leaf(_dense_init(ks[1], (d, f), d, dt), ("embed", "ffn")),
+            "wo": Leaf(_dense_init(ks[2], (f, d), f, dt), ("ffn", "embed")),
+        }
+    return {
+        "wi": Leaf(_dense_init(ks[0], (d, f), d, dt), ("embed", "ffn")),
+        "bi": Leaf(jnp.zeros((f,), dt), ("ffn",)),
+        "wo": Leaf(_dense_init(ks[2], (f, d), f, dt), ("ffn", "embed")),
+        "bo": Leaf(jnp.zeros((d,), dt), ("embed2",)),
+    }
+
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+def apply_mlp(p: Dict, x, cfg):
+    if "wi_gate" in p:
+        g = matmul(x, p["wi_gate"])
+        u = matmul(x, p["wi_up"])
+        h = _act(cfg.act, g) * u
+        h = constrain(h, "batch", "seq_full", "act_ffn")
+        return matmul_out(h, p["wo"], 1, "batch", "seq", None)
+    h = _act(cfg.act, matmul(x, p["wi"]) + p["bi"])
+    h = constrain(h, "batch", "seq_full", "act_ffn")
+    return matmul_out(h, p["wo"], 1, "batch", "seq", None) + p["bo"]

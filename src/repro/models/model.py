@@ -1,0 +1,241 @@
+"""Unified LM: builds any assigned architecture from its ModelConfig.
+
+Block kinds (cycled through ``cfg.block_pattern``):
+  attn       — pre-norm GQA attention + gated/plain MLP
+  local_attn — same with ``cfg.local_window`` sliding window
+  moe        — attention + top-k MoE FFN (+ optional Arctic dense residual)
+  ssd        — Mamba-2 mixer block (no MLP)
+  rglru      — Griffin recurrent block + MLP
+
+Homogeneous stacks run under ``lax.scan`` over stacked per-layer params
+(compile time O(1) in depth — essential for the 80-layer dry-runs);
+heterogeneous patterns (RecurrentGemma's 26-layer 1:2 hybrid) unroll.
+``cfg.remat`` wraps each block in ``jax.checkpoint``: the only live
+activations between layers are the (batch-, sequence-sharded) residuals.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from . import layers as L
+from .cache import LayerCache, init_caches
+from .moe import apply_moe, init_moe
+from .rglru import apply_rglru_block, init_rglru_block
+from .ssm import apply_ssd_block, init_ssd_block
+
+
+# ------------------------------------------------------------------ blocks
+def init_block(key, kind: str, cfg) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    if kind in ("attn", "local_attn"):
+        return {
+            "norm1": L.init_norm(cfg.d_model, dt, cfg.norm),
+            "attn": L.init_attention(ks[0], cfg),
+            "norm2": L.init_norm(cfg.d_model, dt, cfg.norm),
+            "mlp": L.init_mlp(ks[1], cfg),
+        }
+    if kind == "moe":
+        p = {
+            "norm1": L.init_norm(cfg.d_model, dt, cfg.norm),
+            "attn": L.init_attention(ks[0], cfg),
+            "norm2": L.init_norm(cfg.d_model, dt, cfg.norm),
+            "moe": init_moe(ks[1], cfg),
+        }
+        if cfg.dense_residual_ff:
+            p["mlp"] = L.init_mlp(ks[2], cfg, d_ff=cfg.dense_residual_ff)
+        return p
+    if kind == "ssd":
+        return {"ssd": init_ssd_block(ks[0], cfg)}
+    if kind == "rglru":
+        return {
+            "rec": init_rglru_block(ks[0], cfg),
+            "norm2": L.init_norm(cfg.d_model, dt, cfg.norm),
+            "mlp": L.init_mlp(ks[1], cfg),
+        }
+    raise ValueError(kind)
+
+
+def apply_block(
+    p: Dict, kind: str, x, cfg, positions,
+    cache: Optional[LayerCache] = None,
+) -> Tuple[jax.Array, Optional[LayerCache], Tuple]:
+    """Returns (x', new_cache, (moe_lb, moe_z))."""
+    x = constrain(x, "batch", "seq", None)
+    zero = jnp.zeros((), jnp.float32)
+    aux = (zero, zero)
+    if kind in ("attn", "local_attn", "moe"):
+        window = cfg.local_window if kind == "local_attn" else cfg.window
+        h = L.apply_norm(p["norm1"], x, cfg.norm, cfg.norm_eps)
+        a, new_cache = L.apply_attention(
+            p["attn"], h, cfg, positions, window=window, cache=cache,
+            kernel_impl=cfg.kernel_impl,
+        )
+        x = x + a
+        h = L.apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
+        if kind == "moe":
+            m, metrics = apply_moe(p["moe"], h, cfg, impl=cfg.moe_impl)
+            aux = (metrics["moe_lb_loss"], metrics["moe_z_loss"])
+            if "mlp" in p:  # Arctic: dense MLP residual in parallel
+                m = m + L.apply_mlp(p["mlp"], h, cfg)
+            x = x + m
+        else:
+            x = x + L.apply_mlp(p["mlp"], h, cfg)
+    elif kind == "ssd":
+        a, new_cache = apply_ssd_block(
+            p["ssd"], x, cfg, cache=cache, kernel_impl=cfg.kernel_impl)
+        x = x + a
+    elif kind == "rglru":
+        a, new_cache = apply_rglru_block(p["rec"], x, cfg, cache=cache)
+        x = x + a
+        h = L.apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
+        x = x + L.apply_mlp(p["mlp"], h, cfg)
+    else:
+        raise ValueError(kind)
+    x = constrain(x, "batch", "seq", None)
+    return x, new_cache, aux
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "selective":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(cfg.remat)
+
+
+# ------------------------------------------------------------------- model
+def init_model(key, cfg):
+    """Returns a Leaf tree (arrays + logical axes)."""
+    ks = jax.random.split(key, cfg.num_layers + 3)
+    tree: Dict[str, Any] = {
+        "embed": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model, jnp.dtype(cfg.dtype)),
+        "final_norm": L.init_norm(cfg.d_model, jnp.dtype(cfg.dtype), cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        tree["head"] = L.init_embedding(ks[1], cfg.vocab_size, cfg.d_model,
+                                        jnp.dtype(cfg.dtype))
+    pattern = cfg.pattern_for_depth()
+    if cfg.scan_layers and len(set(pattern)) == 1:
+        per_layer = [init_block(ks[3 + i], pattern[0], cfg)
+                     for i in range(cfg.num_layers)]
+        stacked = jax.tree.map(
+            lambda *ls: L.Leaf(jnp.stack([l.value for l in ls]),
+                               ("layers",) + ls[0].axes),
+            *per_layer, is_leaf=L.is_leaf)
+        tree["blocks_scanned"] = stacked
+    else:
+        tree["blocks"] = [init_block(ks[3 + i], pattern[i], cfg)
+                          for i in range(cfg.num_layers)]
+    return tree
+
+
+def model_spec(cfg):
+    """(params_struct, axes) via eval_shape — no allocation (dry-run path)."""
+    leaf_tree = jax.eval_shape(functools.partial(init_model, cfg=cfg),
+                               jax.random.PRNGKey(0))
+    return L.split_leaves(leaf_tree)
+
+
+def forward(
+    params: Dict, cfg,
+    tokens: Optional[jax.Array] = None,   # (B, S) int32
+    embeds: Optional[jax.Array] = None,   # (B, S, d) modality-frontend stub
+    caches: Optional[List[LayerCache]] = None,
+    pos=0,  # scalar: absolute position of the first input token
+    last_token_only: bool = False,  # unembed only the final position
+) -> Tuple[jax.Array, Optional[List[LayerCache]], Dict]:
+    """Returns (logits, new_caches, aux)."""
+    if embeds is not None:
+        h = embeds.astype(jnp.dtype(cfg.dtype))
+        B, S = embeds.shape[:2]
+    else:
+        h = L.apply_embedding(params["embed"], tokens)
+        B, S = tokens.shape
+    h = constrain(h, "batch", "seq", None)
+    positions = pos + jnp.arange(S, dtype=jnp.int32)[None, :]
+    positions = jnp.broadcast_to(positions, (B, S))
+
+    pattern = cfg.pattern_for_depth()
+    lb = jnp.zeros((), jnp.float32)
+    zl = jnp.zeros((), jnp.float32)
+    new_caches: Optional[List[LayerCache]] = None
+
+    if "blocks_scanned" in params:
+        kind = pattern[0]
+        block = functools.partial(apply_block, kind=kind, cfg=cfg)
+
+        if caches is None:
+            def body(carry, layer_params):
+                x, lb_c, zl_c = carry
+                x, _, (lb_i, zl_i) = _maybe_remat(
+                    lambda p, xx: block(p, x=xx, positions=positions), cfg
+                )(layer_params, x)
+                return (x, lb_c + lb_i, zl_c + zl_i), None
+
+            (h, lb, zl), _ = jax.lax.scan(
+                body, (h, lb, zl), params["blocks_scanned"])
+        else:
+            # caches ride in the CARRY (not xs->ys): the per-layer update is
+            # an in-place dynamic_update_index into the donated stacked
+            # buffer, so decode holds ONE copy of the KV cache instead of
+            # scan double-buffering input and output stacks (§Perf log).
+            # Callers may pass the caches pre-stacked (LayerCache with a
+            # leading layer dim) — the production serve path — and then get
+            # the stacked cache back without any unstack copies.
+            pre_stacked = isinstance(caches, LayerCache)
+            stacked_caches = caches if pre_stacked else jax.tree.map(
+                lambda *xs: jnp.stack(xs), *caches)
+
+            def body(carry, layer_params):
+                x, lb_c, zl_c, caches_st, idx = carry
+                cache_i = jax.tree.map(
+                    lambda s: jax.lax.dynamic_index_in_dim(
+                        s, idx, 0, keepdims=False), caches_st)
+                x, new_c, (lb_i, zl_i) = _maybe_remat(
+                    lambda p, xx, cc: block(p, x=xx, positions=positions,
+                                            cache=cc), cfg
+                )(layer_params, x, cache_i)
+                caches_st = jax.tree.map(
+                    lambda s, n: jax.lax.dynamic_update_index_in_dim(
+                        s, n, idx, 0), caches_st, new_c)
+                return (x, lb_c + lb_i, zl_c + zl_i, caches_st, idx + 1), None
+
+            (h, lb, zl, new_stacked, _), _ = jax.lax.scan(
+                body, (h, lb, zl, stacked_caches, jnp.int32(0)),
+                params["blocks_scanned"])
+            if pre_stacked:
+                new_caches = new_stacked
+            else:
+                new_caches = [jax.tree.map(lambda s: s[i], new_stacked)
+                              for i in range(cfg.num_layers)]
+    else:
+        new_caches = [] if caches is not None else None
+        for i, bp in enumerate(params["blocks"]):
+            cache_i = caches[i] if caches is not None else None
+            h, new_c, (lb_i, zl_i) = _maybe_remat(
+                lambda p, xx, cc: apply_block(p, pattern[i], xx, cfg,
+                                              positions, cache=cc), cfg
+            )(bp, h, cache_i)
+            lb, zl = lb + lb_i, zl + zl_i
+            if caches is not None:
+                new_caches.append(new_c)
+
+    if last_token_only:
+        # prefill/serving: project only the final position (a 32k-token
+        # prefill does not need 32k rows of 152k-vocab logits — §Perf log)
+        h = h[:, -1:, :]
+    h = L.apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = L.apply_unembed(head, h)
+    logits = constrain(logits, "batch", "seq", "vocab_out")
+    aux = {"moe_lb_loss": lb, "moe_z_loss": zl}
+    return logits, new_caches, aux

@@ -1,0 +1,261 @@
+"""Mixture-of-Experts layer: top-k token-choice routing (Mixtral/Arctic).
+
+Two execution paths:
+
+* ``dense`` — every expert computed for every token, gate-weighted (exact,
+  O(E/k) compute overhead).  Used for tiny smoke configs and as a fallback.
+
+* ``a2a`` — production path: expert parallelism over the ``data`` mesh axis
+  with explicit ``shard_map`` + ``all_to_all`` dispatch/combine, and tensor
+  parallelism over ``model`` inside each expert.  Collectives per layer:
+  dispatch all-to-all, expert-TP psum, combine all-to-all (+ a tiny pmean
+  for the router aux loss).  Pods form independent EP groups (no cross-pod
+  all-to-all: DCN stays out of the token path).
+
+Virtual sub-experts: the production mesh fixes |data| = 16; when ``E`` does
+not divide it (Mixtral's 8 experts), each expert is split into
+``sub = lcm(E,16)/E`` f-slices ("virtual sub-experts") so the expert shard
+dim always divides the mesh axis.  A token routed to expert e sends its
+activation to all ``sub`` slices and sums their partial outputs —
+numerically identical to the unsplit expert (Megatron-style intra-expert TP
+expressed as extra expert shards).  Cost: dispatch volume x``sub`` for such
+archs; recorded in EXPERIMENTS.md.
+
+Router: softmax over E in fp32, top-k, renormalized gates (Mixtral style),
+load-balance aux loss (Switch) + router z-loss.  Capacity-factor dropping
+is deterministic in token order.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..dist.sharding import active_rules, constrain
+from .layers import Leaf, _act, _dense_init
+
+
+def _sub_factor(E: int, ndata: int) -> int:
+    return math.lcm(E, ndata) // E
+
+
+def init_moe(key, cfg) -> Dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    # store at the finest virtualization the production mesh needs (16);
+    # the layout is transparent to smaller meshes (expert dim just divides).
+    sub = _sub_factor(E, 16)
+    if f % sub:
+        sub = 1
+    E_v, f_v = E * sub, f // sub
+    return {
+        "router": Leaf(_dense_init(ks[0], (d, E), d, jnp.float32), (None, None)),
+        "w_gate": Leaf(_dense_init(ks[1], (E_v, d, f_v), d, dt),
+                       ("expert", "expert_embed", "expert_ffn")),
+        "w_up": Leaf(_dense_init(ks[2], (E_v, d, f_v), d, dt),
+                     ("expert", "expert_embed", "expert_ffn")),
+        "w_down": Leaf(_dense_init(ks[3], (E_v, f_v, d), f, dt),
+                       ("expert", "expert_ffn", "expert_embed")),
+    }
+
+
+def _router(x2d, wr, E: int, k: int):
+    """fp32 routing -> (gates (N,k), top_idx (N,k), loss pieces).
+
+    Loss pieces (load (E,), importance (E,), n, z_sum) are SUMS so callers
+    can psum them across shards and form the exact global losses (a mean of
+    per-shard losses is not the global loss — caught by
+    test_moe_a2a_matches_dense)."""
+    logits = jnp.einsum("nd,de->ne", x2d.astype(jnp.float32),
+                        wr.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, k)
+    gates = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)  # (N, k, E)
+    load = onehot.sum(axis=(0, 1))
+    importance = probs.sum(axis=0)
+    n = jnp.float32(probs.shape[0])
+    z_sum = jnp.sum(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return gates, top_idx, (load, importance, n, z_sum)
+
+
+def _form_losses(pieces, E: int, k: int):
+    load, importance, n, z_sum = pieces
+    lb = E * jnp.sum((load / (n * k)) * (importance / n))
+    return lb, z_sum / n
+
+
+def _ffn(blocks, wg, wu, wd, act: str):
+    """blocks: (E_loc, C, d) -> (E_loc, C, d) partial outputs (f-sliced)."""
+    g = jnp.einsum("ecd,edf->ecf", blocks, wg,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", blocks, wu,
+                   preferred_element_type=jnp.float32)
+    h = (_act(act, g) * u).astype(blocks.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, wd,
+                      preferred_element_type=jnp.float32).astype(blocks.dtype)
+
+
+def apply_moe(p: Dict, x, cfg, impl: str = "auto") -> Tuple[jax.Array, Dict]:
+    """x: (B, S, d) -> (y, metrics)."""
+    rules = active_rules()
+    if impl == "auto":
+        use_a2a = (
+            rules is not None
+            and "data" in rules.mesh.shape
+            and "model" in rules.mesh.shape
+            and p["w_gate"].shape[0] % rules.mesh.shape["data"] == 0
+            and p["w_gate"].shape[2] % rules.mesh.shape["model"] == 0
+        )
+        impl = "a2a" if use_a2a else "dense"
+    if impl == "a2a":
+        return _moe_a2a(p, x, cfg, rules)
+    return _moe_dense(p, x, cfg)
+
+
+# ------------------------------------------------------------- dense path
+def _moe_dense(p: Dict, x, cfg) -> Tuple[jax.Array, Dict]:
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    E_v = p["w_gate"].shape[0]
+    sub = E_v // E
+    x2 = x.reshape(B * S, d)
+    gates, top_idx, pieces = _router(x2, p["router"], E, k)
+    lb, z = _form_losses(pieces, E, k)
+
+    g = jnp.einsum("nd,vdf->nvf", x2, p["w_gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("nd,vdf->nvf", x2, p["w_up"],
+                   preferred_element_type=jnp.float32)
+    h = (_act(cfg.act, g) * u).astype(x.dtype)
+    y_v = jnp.einsum("nvf,vfd->nvd", h, p["w_down"],
+                     preferred_element_type=jnp.float32)
+    y_e = y_v.reshape(B * S, E, sub, d).sum(axis=2)  # (N, E, d) fp32
+
+    sel = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)  # (N, k, E)
+    w = (sel * gates[..., None]).sum(axis=1)  # (N, E)
+    y = jnp.einsum("ned,ne->nd", y_e, w)
+    return y.reshape(B, S, d).astype(x.dtype), {"moe_lb_loss": lb, "moe_z_loss": z}
+
+
+# --------------------------------------------------------------- a2a path
+def _local_dim(mesh, spec_entry) -> int:
+    if spec_entry is None:
+        return 1
+    axes = (spec_entry,) if isinstance(spec_entry, str) else spec_entry
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _moe_a2a(p: Dict, x, cfg, rules) -> Tuple[jax.Array, Dict]:
+    mesh = rules.mesh
+    all_axes = tuple(mesh.shape.keys())
+    ndata = mesh.shape["data"]
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    E_v, _, f_v = p["w_gate"].shape
+    sub = E_v // E
+    E_loc = E_v // ndata  # virtual experts per data-rank
+    factor = cfg.moe_capacity_factor
+
+    # Tokens must be REPLICATED over `model` inside the MoE region: the
+    # expert-TP psum sums f-slice partials across model ranks, which is
+    # only valid when every model rank holds the SAME rows.  (Caught by
+    # test_moe_a2a_matches_dense: with seq sharded over model, the psum
+    # mixed different tokens' partials.)  Cost: the dispatch all-to-all is
+    # duplicated per model plane; an SP-aware EP that partitions dispatch
+    # across planes and all-gathers expert outputs is noted as future work.
+    x = constrain(x, "batch", "seq_full", None)
+    x_spec = rules.spec_for(("batch", "seq_full", None), x.shape)
+    b_loc = B // _local_dim(mesh, x_spec[0])
+    s_loc = S // _local_dim(mesh, x_spec[1])
+    n_loc = b_loc * s_loc
+    sends = n_loc * k * sub
+    cap = max(8, int(math.ceil(factor * sends / ndata / 8.0) * 8))
+
+    def moe_local(xb, wr_l, wg_l, wu_l, wd_l):
+        x2 = xb.reshape(n_loc, d)
+        gates, top_idx, pieces = _router(x2, wr_l, E, k)
+        # exact global losses: psum the sufficient statistics, then form
+        # (tokens are duplicated over `model`; ratios cancel the overcount)
+        pieces = jax.lax.psum(pieces, all_axes)
+        lb, z = _form_losses(pieces, E, k)
+
+        # expand to virtual sub-expert sends: (n, k, sub) -> flat M
+        ev = top_idx[:, :, None] * sub + jnp.arange(sub)[None, None, :]
+        ev = ev.reshape(-1)                       # (M,) virtual expert ids
+        gts = jnp.repeat(gates.reshape(-1), sub)  # (M,)
+        tok = jnp.repeat(jnp.arange(n_loc), k * sub)  # (M,) source token
+
+        dest = ev // E_loc          # destination data-rank
+        ev_local = ev % E_loc       # expert index on that rank
+        onehot_dest = jax.nn.one_hot(dest, ndata, dtype=jnp.int32)  # (M, ndata)
+        slot = jnp.cumsum(onehot_dest, axis=0) - onehot_dest
+        slot = (slot * onehot_dest).sum(-1)       # (M,) rank among same-dest
+        keep = slot < cap
+        slot_c = jnp.where(keep, slot, cap)       # drop row = cap
+
+        send_x = jnp.zeros((ndata, cap + 1, d), xb.dtype)
+        send_x = send_x.at[dest, slot_c].set(x2[tok], mode="drop")
+        send_e = jnp.full((ndata, cap + 1), -1, jnp.int32)
+        send_e = send_e.at[dest, slot_c].set(ev_local, mode="drop")
+        send_x, send_e = send_x[:, :cap], send_e[:, :cap]
+
+        # dispatch all-to-all over the data axis (within-pod EP groups)
+        recv_x = jax.lax.all_to_all(send_x, "data", 0, 0)  # (ndata, cap, d)
+        recv_e = jax.lax.all_to_all(send_e, "data", 0, 0)
+        R = ndata * cap
+        rx = recv_x.reshape(R, d)
+        re = recv_e.reshape(R)
+        valid = re >= 0
+
+        if E_loc == 1:
+            part = _ffn(rx[None], wg_l, wu_l, wd_l, cfg.act)
+            part = jax.lax.psum(part, "model")  # sum f_v TP partials
+            out_rows = part[0] * valid[:, None].astype(part.dtype)
+        else:
+            cap_e = max(8, int(math.ceil(factor * R / E_loc / 8.0) * 8))
+            oh = jax.nn.one_hot(re, E_loc, dtype=jnp.int32) * valid[:, None]
+            pos = jnp.cumsum(oh, axis=0) - oh
+            pos = (pos * oh).sum(-1)
+            ok = valid & (pos < cap_e)
+            pos_c = jnp.where(ok, pos, cap_e)
+            e_safe = jnp.clip(re, 0, E_loc - 1)
+            buf = jnp.zeros((E_loc, cap_e + 1, d), xb.dtype)
+            buf = buf.at[e_safe, pos_c].set(rx, mode="drop")
+            part = _ffn(buf[:, :cap_e], wg_l, wu_l, wd_l, cfg.act)
+            part = jax.lax.psum(part, "model")
+            out_rows = part[e_safe, jnp.clip(pos_c, 0, cap_e - 1)]
+            out_rows = out_rows * ok[:, None].astype(out_rows.dtype)
+
+        # combine all-to-all (reverse direction)
+        back = jax.lax.all_to_all(out_rows.reshape(ndata, cap, d), "data", 0, 0)
+        got = back[dest, jnp.clip(slot_c, 0, cap - 1)]  # (M, d)
+        got = (got.astype(jnp.float32)
+               * keep[:, None].astype(jnp.float32)
+               * gts[:, None])
+        y2 = jax.ops.segment_sum(got, tok, num_segments=n_loc)
+        return y2.reshape(b_loc, s_loc, d).astype(xb.dtype), lb, z
+
+    wspec = {
+        "wr": P(),  # router is tiny; replicate
+        "wg": rules.spec_for(("expert", "expert_embed", "expert_ffn"),
+                             p["w_gate"].shape),
+        "wu": rules.spec_for(("expert", "expert_embed", "expert_ffn"),
+                             p["w_up"].shape),
+        "wd": rules.spec_for(("expert", "expert_ffn", "expert_embed"),
+                             p["w_down"].shape),
+    }
+    y, lb, z = jax.shard_map(
+        moe_local,
+        mesh=mesh,
+        in_specs=(x_spec, wspec["wr"], wspec["wg"], wspec["wu"], wspec["wd"]),
+        out_specs=(x_spec, P(), P()),
+        check_vma=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    y = constrain(y, "batch", "seq", None)  # back to the SP residual layout
+    return y, {"moe_lb_loss": lb, "moe_z_loss": z}

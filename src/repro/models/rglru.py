@@ -1,0 +1,115 @@
+"""Griffin / RecurrentGemma recurrent block — arXiv:2402.19427.
+
+Recurrent block:  y = W_out( GeLU(W_gate x) ⊙ RG-LRU(conv1d(W_x x)) )
+RG-LRU:           r_t = σ(W_a u_t + b_a)        (recurrence gate)
+                  i_t = σ(W_i u_t + b_i)        (input gate)
+                  a_t = exp(-c · softplus(Λ) · r_t),  c = 8
+                  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+
+The linear recurrence runs as ``lax.associative_scan`` over the sequence
+(log-depth, XLA-parallel); decode is the O(width) single-step update.
+Gate projections are dense (the paper uses block-diagonal; dense is a
+strict superset — divergence noted in DESIGN.md).  Width shards over
+``model``; the scan is over the (replicated) sequence dim.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import constrain
+from .cache import LayerCache
+from .layers import Leaf, _dense_init, apply_norm, init_norm, matmul
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg) -> Dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    # Λ init so that a^c ∈ [0.9, 0.999] (paper §2.4)
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * _C)))  # softplus^-1
+    return {
+        "norm": init_norm(d, dt, cfg.norm),
+        "w_gate": Leaf(_dense_init(ks[0], (d, w), d, dt), ("embed", "lru")),
+        "w_x": Leaf(_dense_init(ks[1], (d, w), d, dt), ("embed", "lru")),
+        "conv": Leaf(_dense_init(ks[2], (cfg.conv1d_width, w),
+                                 cfg.conv1d_width, dt), ("conv_k", "lru")),
+        "w_a": Leaf(_dense_init(ks[3], (w, w), w, dt), ("lru", "lru")),
+        "b_a": Leaf(jnp.zeros((w,), jnp.float32), ("lru",)),
+        "w_i": Leaf(_dense_init(ks[4], (w, w), w, dt), ("lru", "lru")),
+        "b_i": Leaf(jnp.zeros((w,), jnp.float32), ("lru",)),
+        "lam": Leaf(lam, ("lru",)),
+        "w_out": Leaf(_dense_init(ks[6], (w, d), w, dt), ("lru", "embed")),
+    }
+
+
+def _rglru_coeffs(p, u):
+    """u: (..., w) conv output -> (a, b) of h = a*h_prev + b, fp32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(matmul(uf, p["w_a"].astype(jnp.float32)) + p["b_a"])
+    i = jax.nn.sigmoid(matmul(uf, p["w_i"].astype(jnp.float32)) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, b
+
+
+def _causal_conv(x, w):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), w.astype(jnp.float32)[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=w.shape[1],
+    )
+    return out.astype(x.dtype)
+
+
+def apply_rglru_block(
+    p: Dict, x, cfg,
+    cache: Optional[LayerCache] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, d = x.shape
+    xn = apply_norm(p["norm"], x, cfg.norm, cfg.norm_eps)
+    gate = jax.nn.gelu(matmul(xn, p["w_gate"]).astype(jnp.float32))
+    u = matmul(xn, p["w_x"])
+    u = constrain(u, "batch", "seq_full", "lru")
+
+    new_cache = None
+    decode = cache is not None and S == 1
+    if not decode:
+        K = p["conv"].shape[0]
+        u_tail = u[:, S - (K - 1):, :]
+        u = _causal_conv(u, p["conv"])
+        a, b = _rglru_coeffs(p, u)  # (B,S,w) each
+        # associative scan over seq: (a2,b2)∘(a1,b1) = (a1*a2, a2*b1 + b2)
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        if cache is not None:  # prefill: expose final state for decode
+            new_cache = LayerCache(kind="rglru", conv=u_tail, h=h[:, -1])
+    else:
+        K = p["conv"].shape[0]
+        wins = jnp.concatenate([cache.conv, u[:, 0][:, None]], axis=1)
+        u1 = jnp.einsum("bkc,kc->bc", wins.astype(jnp.float32),
+                        p["conv"].astype(jnp.float32)).astype(u.dtype)
+        a, b = _rglru_coeffs(p, u1[:, None])
+        h = a[:, 0] * cache.h + b[:, 0]
+        new_cache = LayerCache(kind="rglru", conv=wins[:, 1:], h=h)
+        h = h[:, None]
+
+    y = (gate * h).astype(x.dtype)
+    return matmul(y, p["w_out"]), new_cache
+
+

