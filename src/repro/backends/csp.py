@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import pcast, shard_map
 from ..core.graph import TaskGraph
 from . import body
 from .base import Backend, register_backend
@@ -108,7 +109,7 @@ class CSPBackend(Backend):
             payload0 = jnp.zeros((local, Pels), jnp.float32)
             # the carry becomes device-varying after the first exchange;
             # mark it so from the start (shard_map vma typing)
-            payload0 = jax.lax.pcast(payload0, (AXIS,), to="varying")
+            payload0 = pcast(payload0, (AXIS,), to="varying")
 
             def step(payload, xs):
                 t, mat_t, it_t = xs
@@ -136,7 +137,7 @@ class CSPBackend(Backend):
             final, _ = jax.lax.scan(step, payload0, (ts, lmats_l, iters_l))
             return final
 
-        shmapped = jax.shard_map(
+        shmapped = shard_map(
             rank_program,
             mesh=self.mesh,
             in_specs=(P(None, AXIS, None), P(None, AXIS)),

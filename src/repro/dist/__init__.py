@@ -1,0 +1,8 @@
+"""Distribution subsystem: sharding rules, compressed collectives,
+pipeline parallelism.
+
+Submodules are imported directly (``from repro.dist import sharding``)
+rather than re-exported here: ``models``/``optim`` import
+``dist.sharding`` at module load, so an eager import of
+``dist.pipeline`` (which imports ``models``) would create a cycle.
+"""

@@ -1,0 +1,148 @@
+"""Pipeline parallelism mapped onto the paper's *sweep* dependence pattern.
+
+A pipeline schedule over S stages and M microbatches IS a sweep task
+graph (paper Table 2): task ``(t, s)`` — clock tick t, stage s — depends
+on ``(t-1, s-1)`` (the activation arriving from the previous stage) and
+``(t-1, s)`` (the stage's own previous microbatch, the in-order
+constraint).  ``pp_schedule`` returns that graph; ``pp_forward``
+executes it wavefront-by-wavefront, so the execution order is exactly
+the order a pipelined runtime would realize, while the numerics match
+the non-pipelined reference bit-for-tolerance.
+
+Stages slice the scanned homogeneous block stack: stage ``s`` owns
+layers ``[s*L/S, (s+1)*L/S)``.  Stage 0 additionally embeds tokens; the
+last stage feeds the final norm + unembed.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.graph import TaskGraph, make_graph
+from ..models import layers as L
+from ..models import model as M
+from .sharding import constrain
+
+
+def pp_schedule(num_stages: int, num_micro: int) -> TaskGraph:
+    """The pipeline schedule as a sweep task graph.
+
+    width = stages, height = micro + stages - 1 clock ticks (fill +
+    steady state + drain); microbatch ``m`` runs on stage ``s`` at tick
+    ``t = m + s``.
+    """
+    return make_graph(
+        width=num_stages,
+        height=num_micro + num_stages - 1,
+        pattern="sweep",
+        iterations=1,
+    )
+
+
+def stack_params_by_stage(params: Dict, num_stages: int) -> Dict:
+    """Reshape the scanned (L, ...) block stack to (stages, L/stages, ...)."""
+    if "blocks_scanned" not in params:
+        raise ValueError(
+            "pipeline parallelism requires a scanned homogeneous block stack")
+    blocks = params["blocks_scanned"]
+    depth = jax.tree.leaves(blocks)[0].shape[0]
+    if depth % num_stages:
+        raise ValueError(f"{depth} layers not divisible by {num_stages} stages")
+    out = {k: v for k, v in params.items() if k != "blocks_scanned"}
+    out["blocks_scanned"] = jax.tree.map(
+        lambda x: x.reshape((num_stages, depth // num_stages) + x.shape[1:]),
+        blocks)
+    return out
+
+
+def _run_stage(pp_params: Dict, stage: int, h, cfg, positions):
+    """-> (h', stage MoE aux (lb, zl) summed over the stage's layers)."""
+    kind = cfg.pattern_for_depth()[0]
+    stage_blocks = jax.tree.map(lambda x: x[stage],
+                                pp_params["blocks_scanned"])
+    zero = jnp.zeros((), jnp.float32)
+
+    def body(carry, layer_params):
+        x, lb, zl = carry
+        x, _, (lb_i, zl_i) = M.apply_block(layer_params, kind, x, cfg,
+                                           positions)
+        return (x, lb + lb_i, zl + zl_i), None
+
+    (h, lb, zl), _ = jax.lax.scan(body, (h, zero, zero), stage_blocks)
+    return h, (lb, zl)
+
+
+def _pp_forward_with_aux(pp_params: Dict, cfg, tokens, num_stages: int,
+                         num_micro: int):
+    """Pipelined forward -> (logits, aux); numerics match M.forward.
+
+    MoE aux losses sum over layers (as in the reference) and average
+    over microbatches (router statistics are per-microbatch under
+    pipelining, the same treatment gradient accumulation applies).
+    """
+    B, S = tokens.shape
+    if B % num_micro:
+        raise ValueError(f"batch {B} not divisible by {num_micro} microbatches")
+    mb = B // num_micro
+    positions = jnp.broadcast_to(
+        jnp.arange(S, dtype=jnp.int32)[None, :], (mb, S))
+
+    sched = pp_schedule(num_stages, num_micro)
+    acts: Dict[Tuple[int, int], Any] = {}  # (stage, micro) -> activation
+    outs = [None] * num_micro
+    lb = zl = jnp.zeros((), jnp.float32)
+    for t in range(sched.height):  # wavefront clock
+        for s in range(num_stages):
+            m = t - s
+            if not (0 <= m < num_micro):
+                continue
+            if s == 0:
+                h = L.apply_embedding(pp_params["embed"],
+                                      tokens[m * mb:(m + 1) * mb])
+                h = constrain(h, "batch", "seq", None)
+            else:
+                h = acts.pop((s - 1, m))
+            h, (lb_i, zl_i) = _run_stage(pp_params, s, h, cfg, positions)
+            lb, zl = lb + lb_i, zl + zl_i
+            if s == num_stages - 1:
+                outs[m] = h
+            else:
+                acts[(s, m)] = h
+
+    h = jnp.concatenate(outs, axis=0)
+    h = L.apply_norm(pp_params["final_norm"], h, cfg.norm, cfg.norm_eps)
+    head = pp_params["embed"] if cfg.tie_embeddings else pp_params["head"]
+    logits = L.apply_unembed(head, h)
+    logits = constrain(logits, "batch", "seq", "vocab_out")
+    inv = 1.0 / num_micro
+    return logits, {"moe_lb_loss": lb * inv, "moe_z_loss": zl * inv}
+
+
+def pp_forward(pp_params: Dict, cfg, tokens, num_stages: int,
+               num_micro: int):
+    """Pipelined forward pass -> logits, numerically matching M.forward."""
+    logits, _ = _pp_forward_with_aux(pp_params, cfg, tokens, num_stages,
+                                     num_micro)
+    return logits
+
+
+def pp_loss_fn(pp_params: Dict, cfg, batch: Dict, num_stages: int,
+               num_micro: int):
+    """Next-token loss over the pipelined forward -> (total, metrics).
+
+    Same objective as ``train_step.loss_fn``: shared token loss plus
+    the MoE aux terms with the same coefficients.
+    """
+    from ..train.train_step import MOE_LB_COEF, MOE_Z_COEF, token_loss
+
+    logits, aux = _pp_forward_with_aux(pp_params, cfg, batch["tokens"],
+                                       num_stages, num_micro)
+    nll, zloss = token_loss(logits, batch["labels"])
+    total = (nll + zloss
+             + MOE_LB_COEF * aux["moe_lb_loss"]
+             + MOE_Z_COEF * aux["moe_z_loss"])
+    return total, {"loss": nll, "z_loss": zloss,
+                   "moe_lb_loss": aux["moe_lb_loss"],
+                   "total_loss": total}

@@ -1,0 +1,158 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Every tensor in the repo carries *logical* axis names (``"embed"``,
+``"heads"``, ``"batch"``...) rather than concrete mesh axes.  A
+``ShardingRules`` table maps each logical axis to an ordered list of
+*candidate* mesh placements; resolution walks the tensor's axes
+left-to-right and, per axis, takes the first candidate that
+
+  * names only mesh axes that exist in the mesh,
+  * names only mesh axes not already used by this tensor
+    (a mesh axis shards at most one dim of any tensor), and
+  * evenly divides the dimension (the *divisibility fallback*:
+    Arctic's 56 heads don't divide a 16-way ``model`` axis, so heads
+    replicate and attention runs context-parallel instead — no
+    per-arch special-casing).
+
+A candidate may be a single mesh axis (``"model"``) or a tuple
+(``("pod", "data")``) whose product shards one dim — how the batch and
+FSDP dims span pods on the multi-pod mesh.
+
+``use_rules``/``active_rules`` install a rules table for a region of
+code; ``constrain`` is the model-side hook that turns logical axes into
+``with_sharding_constraint`` (and is a no-op outside any rules context,
+so single-device tests run the exact same model code).
+"""
+from __future__ import annotations
+
+import dataclasses
+from contextlib import contextmanager
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# one candidate mesh placement: a mesh axis or a tuple sharding jointly
+Candidate = Union[str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    """A mesh (anything with a ``.shape`` axis->size mapping) + rule table."""
+
+    mesh: Any
+    rules: Dict[Optional[str], List[Candidate]]
+
+    def spec_for(
+        self,
+        axis_names: Sequence[Optional[str]],
+        shapes: Sequence[int],
+    ) -> P:
+        """Resolve one tensor's logical axes to a PartitionSpec."""
+        mesh_shape = dict(self.mesh.shape)
+        used: set = set()
+        entries: List[Optional[Candidate]] = []
+        for name, dim in zip(axis_names, shapes):
+            pick: Optional[Candidate] = None
+            for cand in self.rules.get(name, []) if name is not None else []:
+                axes = (cand,) if isinstance(cand, str) else tuple(cand)
+                if any(a not in mesh_shape for a in axes):
+                    continue  # e.g. ("pod","data") on a single-pod mesh
+                if any(a in used for a in axes):
+                    continue  # mesh axis already shards another dim
+                size = int(np.prod([mesh_shape[a] for a in axes]))
+                if dim % size:
+                    continue  # divisibility fallback: try the next candidate
+                pick = axes[0] if len(axes) == 1 else axes
+                used.update(axes)
+                break
+            entries.append(pick)
+        return P(*entries)
+
+    def sharding_for(
+        self,
+        axis_names: Sequence[Optional[str]],
+        shapes: Sequence[int],
+    ) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(axis_names, shapes))
+
+
+def _tp_fsdp_sp_rules() -> Dict[Optional[str], List[Candidate]]:
+    fsdp: List[Candidate] = [("pod", "data"), "data"]
+    tp: List[Candidate] = ["model"]
+    return {
+        # activations
+        "batch": list(fsdp),
+        "seq": list(tp),        # sequence-parallel residual layout
+        "seq_full": [],         # replicated sequence inside attention/FFN
+        "kv_seq": [],
+        "act_heads": list(tp),
+        "kv_heads_act": list(tp),
+        "act_ffn": list(tp),
+        "vocab_out": list(tp),
+        # parameters
+        "embed": list(fsdp),
+        "embed2": [],           # norm scales/biases replicate
+        "vocab": list(tp),
+        "heads": list(tp),
+        "kv_heads": list(tp),
+        "head_dim": [],
+        "ffn": list(tp),
+        "expert": list(fsdp),   # expert parallelism over the data axis
+        "expert_embed": [],
+        "expert_ffn": list(tp),
+        "ssm_inner": list(tp),
+        "ssm_heads": list(tp),
+        "lru": list(tp),
+        "conv_k": [],
+        "layers": [],           # scanned-stack leading dim stays unsharded
+    }
+
+
+def _dp_only_rules() -> Dict[Optional[str], List[Candidate]]:
+    """Naive data parallelism: batch over (pod x) data, replicate the rest."""
+    return {"batch": [("pod", "data"), "data"]}
+
+
+_STRATEGIES = {
+    "tp+fsdp+sp": _tp_fsdp_sp_rules,
+    "dp_only": _dp_only_rules,
+}
+
+
+def make_rules(mesh, strategy: str = "tp+fsdp+sp") -> ShardingRules:
+    if strategy not in _STRATEGIES:
+        raise ValueError(
+            f"unknown sharding strategy {strategy!r}; known: {sorted(_STRATEGIES)}")
+    return ShardingRules(mesh=mesh, rules=_STRATEGIES[strategy]())
+
+
+# ------------------------------------------------------- active-rules context
+_ACTIVE: List[ShardingRules] = []
+
+
+@contextmanager
+def use_rules(rules: ShardingRules):
+    _ACTIVE.append(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.pop()
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def constrain(x, *axes):
+    """Constrain ``x`` to its logical-axes layout under the active rules.
+
+    Identity when no rules are active, so model code is oblivious to
+    whether it runs single-device or sharded.
+    """
+    rules = active_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, rules.spec_for(axes, x.shape)))

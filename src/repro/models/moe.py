@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..dist.sharding import active_rules, constrain
 from .layers import Leaf, _act, _dense_init
 
@@ -250,7 +251,7 @@ def _moe_a2a(p: Dict, x, cfg, rules) -> Tuple[jax.Array, Dict]:
         "wd": rules.spec_for(("expert", "expert_ffn", "expert_embed"),
                              p["w_down"].shape),
     }
-    y, lb, z = jax.shard_map(
+    y, lb, z = shard_map(
         moe_local,
         mesh=mesh,
         in_specs=(x_spec, wspec["wr"], wspec["wg"], wspec["wu"], wspec["wd"]),

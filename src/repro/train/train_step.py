@@ -59,13 +59,8 @@ def init_state(key, cfg, tcfg: TrainConfig) -> Tuple[TrainState, Any]:
     return state, axes_tree
 
 
-def loss_fn(params, cfg, batch: Dict) -> Tuple[jax.Array, Dict]:
-    logits, _, aux = M.forward(
-        params, cfg,
-        tokens=batch.get("tokens"),
-        embeds=batch.get("embeds"),
-    )
-    labels = batch["labels"]
+def token_loss(logits, labels) -> Tuple[jax.Array, jax.Array]:
+    """(nll, z-loss) of next-token logits — shared with dist.pipeline."""
     logits = logits.astype(jnp.float32)
     logz = jax.nn.logsumexp(logits, axis=-1)
     # one-hot contraction instead of take_along_axis: gathering along a
@@ -76,6 +71,16 @@ def loss_fn(params, cfg, batch: Dict) -> Tuple[jax.Array, Dict]:
     tgt = jnp.sum(logits * onehot, axis=-1)
     nll = (logz - tgt).mean()
     zloss = Z_LOSS * (logz ** 2).mean()
+    return nll, zloss
+
+
+def loss_fn(params, cfg, batch: Dict) -> Tuple[jax.Array, Dict]:
+    logits, _, aux = M.forward(
+        params, cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+    )
+    nll, zloss = token_loss(logits, batch["labels"])
     total = nll + zloss
     total = total + MOE_LB_COEF * aux["moe_lb_loss"] + MOE_Z_COEF * aux["moe_z_loss"]
     metrics = {

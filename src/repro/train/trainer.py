@@ -91,9 +91,12 @@ class Trainer:
                     print("SIGTERM: checkpointed, exiting")
                     break
             self._checkpoint(state, int(state.step))
-            self._join_ckpt()
             return state
         finally:
+            # commit any in-flight checkpoint even when the loop raised —
+            # a restart must see the last completed save, not lose it to
+            # an unjoined writer thread
+            self._join_ckpt()
             signal.signal(signal.SIGTERM, prev)
 
     # -- internals -----------------------------------------------------------

@@ -106,10 +106,11 @@ def test_compressed_psum():
     out = run_sub("""
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.dist.compression import compressed_psum
 mesh = jax.make_mesh((8,), ("d",))
 x = np.random.RandomState(0).randn(8, 64).astype(np.float32)
-f = jax.jit(jax.shard_map(lambda v: compressed_psum(v, "d"),
+f = jax.jit(shard_map(lambda v: compressed_psum(v, "d"),
     mesh=mesh, in_specs=P("d"), out_specs=P("d")))
 got = np.asarray(f(jnp.asarray(x)))
 want = x.sum(0, keepdims=True)

@@ -1,6 +1,8 @@
 """Property tests for dependence relations (hypothesis)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import get_pattern, make_graph, pattern_names
