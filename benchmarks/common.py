@@ -20,6 +20,11 @@ from repro.core import (TaskGraph, compute_metg, geometric_iterations,
 from repro.backends import get_backend
 
 
+# CI smoke mode (benchmarks/run.py --smoke): shrink every METG sweep to a
+# few tiny points so the scripts stay exercised without real measurement.
+SMOKE = False
+
+
 @dataclasses.dataclass
 class Row:
     name: str
@@ -47,6 +52,11 @@ def metg_for(
     **graph_kw,
 ):
     """Run the paper's METG procedure for one (backend, pattern) cell."""
+    if SMOKE:
+        iterations_hi = min(iterations_hi, 64)
+        n_points = min(n_points, 3)
+        repeats = 1
+        height = min(height, 8)
     be = get_backend(backend_name)
 
     def graphs_at(iters: int):

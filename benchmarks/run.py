@@ -36,8 +36,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated bench module names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweeps for CI: few points, one repeat")
     args = ap.parse_args()
     mods = args.only.split(",") if args.only else MODULES
+    if args.smoke:
+        from . import common
+        common.SMOKE = True
 
     print("name,us_per_call,derived")
     failures = []

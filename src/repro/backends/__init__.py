@@ -1,19 +1,23 @@
 """Execution backends — the 'n systems' axis of the paper's O(m+n) design.
 
-| backend       | paper analogue                  | schedule        | dispatch cost |
-|---------------|---------------------------------|-----------------|---------------|
-| xla-static    | PaRSEC PTG / Regent / TF graph  | unrolled, AOT   | ~0 per task   |
-| xla-scan      | OpenMP forall / vectorized      | compiled loop   | O(1) per step |
-| shardmap-csp  | MPI CSP (Listing 2)             | SPMD + messages | O(1) per step |
-| host-dynamic  | Dask / Spark / Swift-T          | host per task   | O(1) per task |
+| backend           | paper analogue                  | schedule        | dispatch cost |
+|-------------------|---------------------------------|-----------------|---------------|
+| xla-static        | PaRSEC PTG / Regent / TF graph  | unrolled, AOT   | ~0 per task   |
+| xla-scan          | OpenMP forall / vectorized      | compiled loop   | O(1) per step |
+| shardmap-csp      | MPI CSP (Listing 2)             | SPMD + messages | O(1) per step |
+| shardmap-pipeline | pipelined runtime (stage ring)  | SPMD + messages | O(1) per step |
+| host-dynamic      | Dask / Spark / Swift-T          | host per task   | O(1) per task |
 
 Every backend runs every graph (pattern x kernel x payload x imbalance)
 unchanged, and is validated against the numpy oracle in core.validate.
+The two shard_map backends share the ``repro.dist.collectives`` comm-
+planning layer (ring/halo/allgather modes, ragged-width padding).
 """
 from .base import Backend, backend_names, get_backend, register_backend
-from .csp import CSPBackend
+from .csp import CSPBackend, PlannedSPMDBackend
 from .dataflow import DataflowBackend
 from .host import HostBackend
+from .pipeline import PipelineBackend
 from .scanvec import ScanBackend
 
 __all__ = [
@@ -24,5 +28,7 @@ __all__ = [
     "CSPBackend",
     "DataflowBackend",
     "HostBackend",
+    "PipelineBackend",
+    "PlannedSPMDBackend",
     "ScanBackend",
 ]

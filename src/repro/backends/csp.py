@@ -3,13 +3,14 @@
 Analogue of the paper's MPI implementation (Listing 2): columns are
 distributed over device ranks via ``shard_map``; every timestep each rank
 receives the payloads its local tasks depend on, executes its tasks, and
-sends its outputs.  Two communication modes, chosen like an MPI programmer
-would:
+sends its outputs.  All planning — halo sizing, ragged-width padding,
+dependence re-indexing, mode selection — lives in
+``repro.dist.collectives.CommPlan``; this module only owns execution.
 
-* ``halo``      — nearest-neighbour ``ppermute`` exchange (stencil/sweep/
-                  nearest patterns whose dependency reach fits in a halo).
-* ``allgather`` — general fallback for wide patterns (fft/spread/random),
-                  the MPI_Allgather of payload rows.
+``PlannedSPMDBackend`` is the shared rank-program machinery: any backend
+that blocks graph columns over a mesh axis and moves payloads with a
+``CommPlan`` (CSP over ``cols``, the pipeline backend over ``stage``)
+subclasses it and picks an axis + mode preference.
 
 Like MPI CSP, communication and computation strictly alternate — no
 overlap, no task parallelism — which is exactly why the paper finds MPI
@@ -17,7 +18,6 @@ loses its advantage under imbalance and heavy communication (§V-F/G).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import List, Sequence
 
 import jax
@@ -27,41 +27,36 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..compat import pcast, shard_map
 from ..core.graph import TaskGraph
+from ..dist import collectives as CC
 from . import body
 from .base import Backend, register_backend
 
 AXIS = "cols"
 
 
-def _dependency_reach(graph: TaskGraph) -> int:
-    """max |j - i| over all deps — the halo width an MPI rank would post."""
-    reach = 0
-    for t in range(1, graph.height):
-        m = graph.dependence_matrix(t)
-        for i, j in np.argwhere(m):
-            reach = max(reach, abs(int(j) - int(i)))
-    return reach
+class PlannedSPMDBackend(Backend):
+    """Columns blocked over one mesh axis; movement per a ``CommPlan``.
 
+    Ragged widths are handled by the plan's dead-column padding, so any
+    graph width runs on any rank count (including width < ndev).
+    """
 
-@register_backend("shardmap-csp")
-class CSPBackend(Backend):
-    paradigm = "explicit SPMD message passing (MPI CSP analogue)"
+    axis = AXIS
+    prefer_ring = False
 
     def __init__(self, mesh: Mesh | None = None, comm: str = "auto"):
         if mesh is None:
             devs = np.array(jax.devices())
-            mesh = Mesh(devs, (AXIS,))
-        if comm not in ("auto", "halo", "allgather"):
-            raise ValueError(comm)
+            mesh = Mesh(devs, (self.axis,))
+        if comm not in CC.MODES:
+            raise ValueError(f"unknown comm mode {comm!r}; known: {CC.MODES}")
         self.mesh = mesh
         self.comm = comm
-        self.ndev = mesh.shape[AXIS]
+        self.ndev = mesh.shape[self.axis]
 
-    def _mode(self, graph: TaskGraph, local: int) -> str:
-        if self.comm != "auto":
-            return self.comm
-        reach = _dependency_reach(graph)
-        return "halo" if 0 < reach <= local else ("allgather" if reach else "halo")
+    def plan(self, graph: TaskGraph) -> CC.CommPlan:
+        return CC.plan_comm(graph, self.ndev, self.axis, comm=self.comm,
+                            prefer_ring=self.prefer_ring)
 
     def prepare(self, graphs: Sequence[TaskGraph]):
         progs = [self._prepare_one(g) for g in graphs]
@@ -73,80 +68,50 @@ class CSPBackend(Backend):
         return runner
 
     def _prepare_one(self, graph: TaskGraph):
-        W, H, Pels = graph.width, graph.height, graph.payload_elems
-        ndev = self.ndev
-        if W % ndev:
-            raise ValueError(f"width {W} not divisible by {ndev} ranks")
-        local = W // ndev
-        mode = self._mode(graph, local)
-        reach = _dependency_reach(graph) if mode == "halo" else 0
-        halo = min(reach, local)
-
-        mats, iters = body.graph_static_inputs(graph)  # (H,W,W), (H,W)
-        if mode == "halo":
-            # re-index dep columns into [left halo | local | right halo]
-            ctx = 2 * halo + local
-            lmats = np.zeros((H, W, ctx), dtype=np.uint8)
-            for t in range(H):
-                for i in range(W):
-                    shard, li = divmod(i, local)
-                    base = shard * local - halo
-                    for j in np.argwhere(mats[t, i]).ravel():
-                        lj = int(j) - base
-                        assert 0 <= lj < ctx, (t, i, j, lj)
-                        lmats[t, i, lj] = 1
-        else:
-            lmats = mats  # context is the full gathered width
-
-        lmats_j = jnp.asarray(lmats)
-        iters_j = jnp.asarray(iters)
+        plan = self.plan(graph)
+        local, Pels = plan.local, graph.payload_elems
+        lmats_j = jnp.asarray(plan.local_mats)
+        iters_j = jnp.asarray(plan.iters)
         dynamic = local == 1  # true per-rank loops can stop early
 
         def rank_program(lmats_l, iters_l):
             """Runs on one rank: lmats_l (H, local, ctx), iters_l (H, local)."""
-            rank = jax.lax.axis_index(AXIS)
-            cols = rank * local + jnp.arange(local)
+            cols = plan.local_cols()
             payload0 = jnp.zeros((local, Pels), jnp.float32)
             # the carry becomes device-varying after the first exchange;
             # mark it so from the start (shard_map vma typing)
-            payload0 = pcast(payload0, (AXIS,), to="varying")
+            payload0 = pcast(payload0, (self.axis,), to="varying")
 
             def step(payload, xs):
                 t, mat_t, it_t = xs
-                if mode == "halo":
-                    if halo > 0:
-                        right_dst = [(r, r + 1) for r in range(ndev - 1)]
-                        left_dst = [(r, r - 1) for r in range(1, ndev)]
-                        from_left = jax.lax.ppermute(
-                            payload[-halo:], AXIS, right_dst) if right_dst else \
-                            jnp.zeros((halo, Pels), jnp.float32)
-                        from_right = jax.lax.ppermute(
-                            payload[:halo], AXIS, left_dst) if left_dst else \
-                            jnp.zeros((halo, Pels), jnp.float32)
-                        ctx_payload = jnp.concatenate(
-                            [from_left, payload, from_right])
-                    else:
-                        ctx_payload = payload
-                else:
-                    ctx_payload = jax.lax.all_gather(payload, AXIS, tiled=True)
+                ctx_payload = plan.exchange(payload)
                 new = body.timestep(graph, t, ctx_payload, mat_t, it_t,
                                     cols=cols, dynamic=dynamic)
                 return new, None
 
-            ts = jnp.arange(H, dtype=jnp.uint32)
+            ts = jnp.arange(graph.height, dtype=jnp.uint32)
             final, _ = jax.lax.scan(step, payload0, (ts, lmats_l, iters_l))
             return final
 
         shmapped = shard_map(
             rank_program,
             mesh=self.mesh,
-            in_specs=(P(None, AXIS, None), P(None, AXIS)),
-            out_specs=P(AXIS, None),
+            in_specs=(P(None, self.axis, None), P(None, self.axis)),
+            out_specs=P(self.axis, None),
+            # dynamic mode lowers the kernel loop to `while` (traced trip
+            # count), which the legacy check_rep pass cannot type
+            check_vma=not dynamic,
         )
         fn = jax.jit(shmapped)
         compiled = fn.lower(lmats_j, iters_j).compile()
 
         def run_one():
-            return jax.block_until_ready(compiled(lmats_j, iters_j))
+            out = jax.block_until_ready(compiled(lmats_j, iters_j))
+            return plan.trim(out)
 
         return run_one
+
+
+@register_backend("shardmap-csp")
+class CSPBackend(PlannedSPMDBackend):
+    paradigm = "explicit SPMD message passing (MPI CSP analogue)"

@@ -80,12 +80,24 @@ class TaskGraph:
 
         Time-invariant patterns produce identical slices; backends may
         collapse them (the dataflow backend checks this to enable scan reuse).
+        Cached on the (frozen) graph: comm planning, invariance checks and
+        backend prepare all consume the same stack.
         """
-        return np.stack([self.dependence_matrix(t) for t in range(self.height)])
+        cached = self.__dict__.get("_mats_cache")
+        if cached is None:
+            cached = np.stack(
+                [self.dependence_matrix(t) for t in range(self.height)])
+            cached.setflags(write=False)
+            object.__setattr__(self, "_mats_cache", cached)
+        return cached
 
     def is_time_invariant(self) -> bool:
-        ms = self.dependence_matrices()[1:]
-        return bool(ms.size == 0 or (ms == ms[0]).all())
+        cached = self.__dict__.get("_invariant_cache")
+        if cached is None:
+            ms = self.dependence_matrices()[1:]
+            cached = bool(ms.size == 0 or (ms == ms[0]).all())
+            object.__setattr__(self, "_invariant_cache", cached)
+        return cached
 
     # -- payloads ------------------------------------------------------------
     @property

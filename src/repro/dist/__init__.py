@@ -1,5 +1,10 @@
-"""Distribution subsystem: sharding rules, compressed collectives,
-pipeline parallelism.
+"""Distribution subsystem: sharding rules, comm planning, compressed
+collectives, pipeline parallelism.
+
+``collectives`` is the shared comm-planning layer: ``CommPlan`` decides
+how task-graph payloads move between ranks (ring / halo / allgather,
+with ragged-width padding) and is consumed by the ``shardmap-csp`` and
+``shardmap-pipeline`` backends.
 
 Submodules are imported directly (``from repro.dist import sharding``)
 rather than re-exported here: ``models``/``optim`` import

@@ -1,0 +1,215 @@
+"""Unified communication planning for SPMD backends (the comm-plan layer).
+
+Both rank-parallel backends (``shardmap-csp``, ``shardmap-pipeline``) and
+the distributed training stack move dependency payloads between device
+ranks each timestep.  This module lifts that planning out of the backends
+into one reusable object, ``CommPlan``:
+
+* **analysis** — ``dependency_reach``/``directional_reach`` vectorize the
+  dependence-offset scan over ``TaskGraph.dependence_matrices()`` (one
+  ``np.nonzero`` over the whole stack instead of a Python loop per
+  timestep) and short-circuit to a single timestep slice for
+  time-invariant graphs;
+* **placement** — columns are blocked over ``ndev`` ranks, padding ragged
+  widths up to the next multiple with *dead columns* (zero dependence
+  rows, zero iterations) so any width runs on any rank count — the
+  paper's MPI implementation handles ragged columns the same way;
+* **movement** — three modes, selected automatically from the reach:
+
+  ====================  =====================================================
+  ``ring``              one-directional ``ppermute`` toward higher ranks —
+                        the pipeline stage-to-stage activation transfer
+                        (deps reach left only, e.g. sweep graphs)
+  ``halo``              bidirectional nearest-neighbour ``ppermute``
+                        exchange (stencil/nearest reach fits in a halo)
+  ``allgather``         full payload-row gather — the MPI_Allgather
+                        fallback for wide patterns (fft/spread/random)
+  ====================  =====================================================
+
+``CommPlan.exchange`` executes the planned movement *inside* ``shard_map``;
+``CommPlan.local_mats`` are the dependence matrices re-indexed into each
+rank's context window ``[left halo | local block | right halo]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import TaskGraph
+
+MODES = ("auto", "ring", "halo", "allgather")
+
+
+def _dep_offsets(graph: TaskGraph) -> np.ndarray:
+    """All distinct dependence offsets ``j - i`` across the graph.
+
+    Vectorized: one ``np.nonzero`` over the stacked matrices; graphs whose
+    dependence relation is time-invariant are analyzed from a single
+    timestep slice instead of the full (H, W, W) stack.
+    """
+    if graph.height <= 1:
+        return np.empty((0,), np.int64)
+    if graph.is_time_invariant():
+        mats = graph.dependence_matrix(1)[None]
+    else:
+        mats = graph.dependence_matrices()[1:]
+    _, i, j = np.nonzero(mats)
+    return np.unique(j.astype(np.int64) - i.astype(np.int64))
+
+
+def directional_reach(graph: TaskGraph) -> Tuple[int, int]:
+    """(left, right): how far deps reach toward lower / higher columns."""
+    offs = _dep_offsets(graph)
+    if offs.size == 0:
+        return 0, 0
+    return int(max(-offs.min(), 0)), int(max(offs.max(), 0))
+
+
+def dependency_reach(graph: TaskGraph) -> int:
+    """max |j - i| over all deps — the halo width an MPI rank would post."""
+    left, right = directional_reach(graph)
+    return max(left, right)
+
+
+# eq=False: ndarray fields would make the generated __eq__/__hash__ raise
+@dataclasses.dataclass(frozen=True, eq=False)
+class CommPlan:
+    """How one graph's payloads are laid out and moved over ``ndev`` ranks.
+
+    ``local_mats``/``iters`` are padded to ``padded_width`` columns; dead
+    columns (>= ``width``) have empty dependence rows and zero iterations,
+    and are sliced away by ``trim``.
+    """
+
+    mode: str            # "ring" | "halo" | "allgather"
+    axis: str            # mesh axis name the ranks live on
+    ndev: int
+    width: int           # real graph width
+    padded_width: int    # next multiple of ndev
+    local: int           # columns per rank
+    halo: int            # exchange width (0 => no communication)
+    local_mats: np.ndarray   # (H, padded_width, ctx) uint8
+    iters: np.ndarray        # (H, padded_width) int32
+
+    @property
+    def ragged(self) -> bool:
+        return self.padded_width != self.width
+
+    @property
+    def context_width(self) -> int:
+        """Columns of t-1 payload visible to each rank after exchange."""
+        return self.local_mats.shape[-1]
+
+    def local_cols(self):
+        """Global column ids of the calling rank (inside ``shard_map``)."""
+        rank = jax.lax.axis_index(self.axis)
+        return rank * self.local + jnp.arange(self.local)
+
+    def exchange(self, payload):
+        """Move t-1 payloads into this rank's context (inside ``shard_map``).
+
+        payload: (local, P) f32 — the rank's own previous-timestep rows.
+        Returns (context_width, P) rows ordered to match ``local_mats``.
+        """
+        if self.mode == "allgather":
+            return jax.lax.all_gather(payload, self.axis, tiled=True)
+        if self.halo == 0:
+            return payload
+        h, P = self.halo, payload.shape[-1]
+        zeros = jnp.zeros((h, P), payload.dtype)
+        fwd = [(r, r + 1) for r in range(self.ndev - 1)]
+        from_left = (jax.lax.ppermute(payload[-h:], self.axis, fwd)
+                     if fwd else zeros)
+        if self.mode == "ring":
+            return jnp.concatenate([from_left, payload])
+        bwd = [(r, r - 1) for r in range(1, self.ndev)]
+        from_right = (jax.lax.ppermute(payload[:h], self.axis, bwd)
+                      if bwd else zeros)
+        return jnp.concatenate([from_left, payload, from_right])
+
+    def trim(self, gathered):
+        """Drop dead padding columns from a (padded_width, ...) output."""
+        return gathered[: self.width]
+
+
+def _padded_static_inputs(graph: TaskGraph, padded: int):
+    """Dep matrices (H, padded, padded) u8 + iteration counts (H, padded)."""
+    from ..backends import body  # local import: backends import this module
+
+    mats, iters = body.graph_static_inputs(graph)
+    W = graph.width
+    if padded == W:
+        return mats, iters
+    H = graph.height
+    pm = np.zeros((H, padded, padded), np.uint8)
+    pm[:, :W, :W] = mats
+    pi = np.zeros((H, padded), np.int32)  # dead columns: no work
+    pi[:, :W] = iters
+    return pm, pi
+
+
+def plan_comm(
+    graph: TaskGraph,
+    ndev: int,
+    axis: str,
+    comm: str = "auto",
+    prefer_ring: bool = False,
+) -> CommPlan:
+    """Build the communication plan for ``graph`` over ``ndev`` ranks.
+
+    ``comm`` forces a mode; ``auto`` picks the cheapest legal one.  With
+    ``prefer_ring`` (pipeline backends), graphs whose deps reach only
+    toward lower columns use the one-directional ring instead of the
+    bidirectional halo.
+    """
+    if comm not in MODES:
+        raise ValueError(f"unknown comm mode {comm!r}; known: {MODES}")
+    if ndev < 1:
+        raise ValueError(f"need at least one rank, got {ndev}")
+    W, H = graph.width, graph.height
+    padded = -(-W // ndev) * ndev
+    local = padded // ndev
+    left, right = directional_reach(graph)
+    reach = max(left, right)
+
+    if comm == "auto":
+        if reach > local:
+            mode = "allgather"
+        elif prefer_ring and right == 0:
+            mode = "ring"
+        else:
+            mode = "halo"
+    else:
+        mode = comm
+        if mode == "ring" and right > 0:
+            raise ValueError(
+                f"ring comm needs left-only deps, but reach is "
+                f"(left={left}, right={right})")
+        if mode in ("ring", "halo") and reach > local:
+            raise ValueError(
+                f"{mode} comm cannot cover reach {reach} with "
+                f"{local} columns per rank; use allgather")
+
+    mats, iters = _padded_static_inputs(graph, padded)
+    if mode == "allgather":
+        halo = 0
+        lmats = mats  # context is the full gathered (padded) width
+    else:
+        halo = min(reach if mode == "halo" else left, local)
+        lhalo, rhalo = halo, (halo if mode == "halo" else 0)
+        ctx = lhalo + local + rhalo
+        lmats = np.zeros((H, padded, ctx), np.uint8)
+        t_idx, i_idx, j_idx = np.nonzero(mats)
+        # re-index dep columns into [left halo | local block | right halo]
+        lj = j_idx - ((i_idx // local) * local - lhalo)
+        assert ((0 <= lj) & (lj < ctx)).all(), (mode, halo, local)
+        lmats[t_idx, i_idx, lj] = 1
+
+    return CommPlan(
+        mode=mode, axis=axis, ndev=ndev, width=W, padded_width=padded,
+        local=local, halo=halo, local_mats=lmats, iters=iters,
+    )

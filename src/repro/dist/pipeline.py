@@ -12,6 +12,14 @@ the non-pipelined reference bit-for-tolerance.
 Stages slice the scanned homogeneous block stack: stage ``s`` owns
 layers ``[s*L/S, (s+1)*L/S)``.  Stage 0 additionally embeds tokens; the
 last stage feeds the final norm + unembed.
+
+Under a 4D ``(pod, data, model, stage)`` mesh (see
+``launch.mesh.make_production_mesh(pipeline_stages=...)``) the stacked
+stage dim is sharded over the ``stage`` axis via
+``constrain_stage_stack``, so each stage's weights live on their own
+mesh plane; the sweep *task graph itself* can also be executed directly
+by the ``shardmap-pipeline`` backend, which moves payloads stage-to-
+stage with a ``ppermute`` ring (``dist.collectives``).
 """
 from __future__ import annotations
 
@@ -57,6 +65,24 @@ def stack_params_by_stage(params: Dict, num_stages: int) -> Dict:
     return out
 
 
+def constrain_stage_stack(pp_params: Dict) -> Dict:
+    """Pin the stage-stacked blocks to the ``stage`` mesh axis.
+
+    Under a 4D ``(pod, data, model, stage)`` rules context the leading
+    (stage) dim of every stacked block leaf is sharded over ``stage``, so
+    each pipeline stage's weights live on its own mesh plane and XLA
+    moves only the activations stage-to-stage.  Identity outside a rules
+    context or on meshes without a ``stage`` axis.
+    """
+    if "blocks_scanned" not in pp_params:
+        return pp_params
+    out = {k: v for k, v in pp_params.items() if k != "blocks_scanned"}
+    out["blocks_scanned"] = jax.tree.map(
+        lambda x: constrain(x, "stage", *([None] * (x.ndim - 1))),
+        pp_params["blocks_scanned"])
+    return out
+
+
 def _run_stage(pp_params: Dict, stage: int, h, cfg, positions):
     """-> (h', stage MoE aux (lb, zl) summed over the stage's layers)."""
     kind = cfg.pattern_for_depth()[0]
@@ -85,6 +111,7 @@ def _pp_forward_with_aux(pp_params: Dict, cfg, tokens, num_stages: int,
     B, S = tokens.shape
     if B % num_micro:
         raise ValueError(f"batch {B} not divisible by {num_micro} microbatches")
+    pp_params = constrain_stage_stack(pp_params)
     mb = B // num_micro
     positions = jnp.broadcast_to(
         jnp.arange(S, dtype=jnp.int32)[None, :], (mb, S))

@@ -107,6 +107,9 @@ def _tp_fsdp_sp_rules() -> Dict[Optional[str], List[Candidate]]:
         "lru": list(tp),
         "conv_k": [],
         "layers": [],           # scanned-stack leading dim stays unsharded
+        # pipeline: the stage-stacked block dim lives on the stage axis
+        # (skipped on meshes without one — same code runs 3D and 4D)
+        "stage": ["stage"],
     }
 
 

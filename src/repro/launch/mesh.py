@@ -6,13 +6,39 @@ only launch/dryrun.py sets the 512-placeholder-device XLA flag).
 """
 from __future__ import annotations
 
+from typing import Tuple
+
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+def production_mesh_spec(
+    *, multi_pod: bool = False, pipeline_stages: int = 1,
+) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """(shape, axes) of the production mesh, without touching devices.
+
+    Base: 16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+    ``pipeline_stages > 1`` grows a trailing ``stage`` axis carved out of
+    the data axis (total chip count is preserved), giving the 4D
+    ``(pod, data, model, stage)`` strategy that ``dist.pipeline`` and the
+    ``shardmap-pipeline`` backend shard over.
+    """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if pipeline_stages <= 1:
+        return shape, axes
+    data = shape[-2]
+    if data % pipeline_stages:
+        raise ValueError(
+            f"data axis {data} not divisible by {pipeline_stages} stages")
+    shape = shape[:-2] + (data // pipeline_stages, shape[-1], pipeline_stages)
+    return shape, axes + ("stage",)
+
+
+def make_production_mesh(*, multi_pod: bool = False, pipeline_stages: int = 1):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips),
+    optionally with a ``stage`` pipeline axis."""
+    shape, axes = production_mesh_spec(
+        multi_pod=multi_pod, pipeline_stages=pipeline_stages)
     return jax.make_mesh(shape, axes)
 
 

@@ -1,0 +1,83 @@
+"""shard_map'd data-parallel train step with compressed gradient sync.
+
+The reference ``train_step`` is a single program whose sharding is left
+to GSPMD.  This step is the explicit-SPMD counterpart: the batch is
+split over a data axis, every rank computes grads for its shard
+(reusing ``train_step.compute_grads``), and the cross-rank gradient
+all-reduce goes through ``dist.compression.compressed_psum`` — the
+shared-scale int8 all-reduce — at one quarter of fp32 bandwidth.  The
+optimizer update then runs identically on every rank (the synced grads
+are rank-invariant), so the returned state stays replicated.
+
+Numerics: with ``compress=False`` the step is exactly the reference
+step up to the reduction split (per-shard mean, then pmean); with
+``compress=True`` grads additionally carry the int8 quantization error
+bounded by ``0.5 * scale`` per rank (see ``dist.compression``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from ..compat import shard_map
+from ..dist.compression import compressed_psum
+from ..optim import adamw
+from ..optim.schedule import warmup_cosine
+from . import train_step as TS
+
+BATCH_AXIS = "data"
+
+
+def sync_grads(grads, axis: str, compress: bool):
+    """Cross-rank gradient *mean* — compressed or exact (inside shard_map)."""
+    n = jax.lax.psum(1, axis)
+    if compress:
+        return jax.tree.map(
+            lambda g: compressed_psum(g, axis) / n, grads)
+    return jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+
+
+def dp_train_step(state: TS.TrainState, batch: Dict, cfg,
+                  tcfg: TS.TrainConfig, axis: str = BATCH_AXIS,
+                  compress: bool = True):
+    """One data-parallel optimizer step; runs INSIDE ``shard_map``.
+
+    ``state`` is replicated, ``batch`` holds this rank's shard.
+    """
+    lr = warmup_cosine(state.step, tcfg.base_lr, tcfg.warmup_steps,
+                       tcfg.total_steps)
+    grads, metrics = TS.compute_grads(state.params, batch, cfg, tcfg)
+    grads = sync_grads(grads, axis, compress)
+    metrics = {k: jax.lax.pmean(v, axis) for k, v in metrics.items()}
+    new_params, new_opt, opt_metrics = adamw.update(
+        grads, state.opt, state.params, tcfg.adamw, lr=lr)
+    metrics.update(opt_metrics)
+    new_state = TS.TrainState(step=state.step + 1, params=new_params,
+                              opt=new_opt)
+    return new_state, metrics
+
+
+def jit_dp_train_step(cfg, tcfg: TS.TrainConfig, mesh,
+                      axis: str = BATCH_AXIS, compress: bool = True):
+    """Compile-ready shard_map'd step: state replicated, batch split.
+
+    Drop-in for ``train_step.jit_train_step`` — same ``(state, batch) ->
+    (state, metrics)`` signature, so the trainer swaps it in behind a
+    flag.
+    """
+    step = functools.partial(dp_train_step, cfg=cfg, tcfg=tcfg, axis=axis,
+                             compress=compress)
+    shmapped = shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(P(), P(axis)),
+        out_specs=(P(), P()),
+        # the synced grads (and hence state/metrics) are rank-invariant by
+        # construction, but psum-of-varying is typed varying under both vma
+        # systems; skip the replication check instead of pcasting every leaf
+        check_vma=False,
+    )
+    return jax.jit(shmapped, donate_argnums=(0,))

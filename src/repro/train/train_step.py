@@ -101,34 +101,44 @@ def _split_microbatches(batch: Dict, n: int) -> Dict:
     return {k: split(v) for k, v in batch.items()}
 
 
+def compute_grads(params, batch: Dict, cfg, tcfg: TrainConfig):
+    """-> (grads, loss metrics), accumulating over microbatches if asked.
+
+    Shared by the single-program step below and the shard_map'd
+    data-parallel step in ``train.dist_step`` (which syncs the returned
+    grads across ranks before the optimizer update).
+    """
+    grad_fn = jax.value_and_grad(functools.partial(loss_fn, cfg=cfg),
+                                 has_aux=True)
+    if tcfg.grad_accum == 1:
+        (_, metrics), grads = grad_fn(params, batch=batch)
+        return grads, metrics
+
+    micro = _split_microbatches(batch, tcfg.grad_accum)
+
+    def accum(carry, mb):
+        g_acc, m_acc = carry
+        (_, m), g = grad_fn(params, batch=mb)
+        g_acc = jax.tree.map(jnp.add, g_acc, g)
+        m_acc = jax.tree.map(jnp.add, m_acc, m)
+        return (g_acc, m_acc), None
+
+    zeros_g = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    zeros_m = {k: jnp.zeros((), jnp.float32)
+               for k in ("loss", "z_loss", "moe_lb_loss", "total_loss")}
+    (grads, metrics), _ = jax.lax.scan(accum, (zeros_g, zeros_m), micro)
+    inv = 1.0 / tcfg.grad_accum
+    grads = jax.tree.map(lambda g: g * inv, grads)
+    metrics = {k: v * inv for k, v in metrics.items()}
+    return grads, metrics
+
+
 def train_step(state: TrainState, batch: Dict, cfg, tcfg: TrainConfig):
     """One optimizer step (possibly accumulating over microbatches)."""
     lr = warmup_cosine(state.step, tcfg.base_lr, tcfg.warmup_steps,
                        tcfg.total_steps)
-    grad_fn = jax.value_and_grad(functools.partial(loss_fn, cfg=cfg),
-                                 has_aux=True)
-
-    if tcfg.grad_accum == 1:
-        (_, metrics), grads = grad_fn(state.params, batch=batch)
-    else:
-        micro = _split_microbatches(batch, tcfg.grad_accum)
-
-        def accum(carry, mb):
-            g_acc, m_acc = carry
-            (_, m), g = grad_fn(state.params, batch=mb)
-            g_acc = jax.tree.map(jnp.add, g_acc, g)
-            m_acc = jax.tree.map(jnp.add, m_acc, m)
-            return (g_acc, m_acc), None
-
-        zeros_g = jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
-        zeros_m = {k: jnp.zeros((), jnp.float32)
-                   for k in ("loss", "z_loss", "moe_lb_loss", "total_loss")}
-        (grads, metrics), _ = jax.lax.scan(accum, (zeros_g, zeros_m), micro)
-        inv = 1.0 / tcfg.grad_accum
-        grads = jax.tree.map(lambda g: g * inv, grads)
-        metrics = {k: v * inv for k, v in metrics.items()}
-
+    grads, metrics = compute_grads(state.params, batch, cfg, tcfg)
     new_params, new_opt, opt_metrics = adamw.update(
         grads, state.opt, state.params, tcfg.adamw, lr=lr)
     metrics.update(opt_metrics)

@@ -39,8 +39,24 @@ class LoopConfig:
 class Trainer:
     def __init__(self, cfg, tcfg: TS.TrainConfig, dcfg: DataConfig,
                  loop: LoopConfig, step_fn: Optional[Callable] = None,
-                 state_shardings=None):
+                 state_shardings=None, grad_sync: Optional[str] = None,
+                 mesh=None):
+        """``grad_sync`` selects the shard_map'd data-parallel step
+        (``train.dist_step``): ``"psum"`` for the exact all-reduce,
+        ``"compressed_psum"`` for the int8 shared-scale one.  Requires a
+        ``mesh`` with a data axis; ``None`` keeps the GSPMD reference
+        step (or an explicit ``step_fn``)."""
         self.cfg, self.tcfg, self.dcfg, self.loop = cfg, tcfg, dcfg, loop
+        if grad_sync is not None:
+            if step_fn is not None:
+                raise ValueError("pass either step_fn or grad_sync, not both")
+            if grad_sync not in ("psum", "compressed_psum"):
+                raise ValueError(f"unknown grad_sync {grad_sync!r}")
+            if mesh is None:
+                raise ValueError("grad_sync needs a mesh with a data axis")
+            from . import dist_step as DS
+            step_fn = DS.jit_dp_train_step(
+                cfg, tcfg, mesh, compress=grad_sync == "compressed_psum")
         self.step_fn = step_fn or TS.jit_train_step(cfg, tcfg)
         self.state_shardings = state_shardings
         self.metrics_log: List[Dict] = []

@@ -1,0 +1,124 @@
+"""The comm-planning layer: reach analysis, mode selection, ragged padding.
+
+Planning is pure host-side numpy — no devices needed; execution of the
+plans is covered by the backend conformance tests (1-device here,
+8-device in test_distributed.py).
+"""
+import numpy as np
+import pytest
+
+from repro.core import make_graph, pattern_names
+from repro.dist import collectives as CC
+from repro.launch.mesh import production_mesh_spec
+
+
+def brute_force_reach(g):
+    """The old per-timestep Python loop the vectorized analysis replaced."""
+    reach = 0
+    for t in range(1, g.height):
+        for i, j in np.argwhere(g.dependence_matrix(t)):
+            reach = max(reach, abs(int(j) - int(i)))
+    return reach
+
+
+@pytest.mark.parametrize("pattern", pattern_names())
+def test_reach_matches_brute_force(pattern):
+    kw = {"radix": 5} if pattern in ("nearest", "spread") else {}
+    g = make_graph(width=8, height=10, pattern=pattern, iterations=1, **kw)
+    assert CC.dependency_reach(g) == brute_force_reach(g)
+
+
+def test_directional_reach():
+    assert CC.directional_reach(make_graph(pattern="sweep")) == (1, 0)
+    assert CC.directional_reach(make_graph(pattern="stencil")) == (1, 1)
+    assert CC.directional_reach(make_graph(pattern="trivial")) == (0, 0)
+    assert CC.directional_reach(make_graph(pattern="no_comm")) == (0, 0)
+
+
+def test_dependence_matrices_cached():
+    g = make_graph(width=6, height=8, pattern="fft")
+    assert g.dependence_matrices() is g.dependence_matrices()
+    # cached stack is protected against accidental mutation
+    with pytest.raises(ValueError):
+        g.dependence_matrices()[0, 0, 0] = True
+
+
+def test_mode_selection():
+    sweep = make_graph(width=8, height=6, pattern="sweep")
+    stencil = make_graph(width=8, height=6, pattern="stencil")
+    fft = make_graph(width=8, height=6, pattern="fft")
+
+    assert CC.plan_comm(sweep, 4, "stage", prefer_ring=True).mode == "ring"
+    assert CC.plan_comm(sweep, 4, "cols").mode == "halo"  # CSP default
+    assert CC.plan_comm(stencil, 4, "stage", prefer_ring=True).mode == "halo"
+    # fft reach 4 > 2 local columns -> gather
+    assert CC.plan_comm(fft, 4, "cols").mode == "allgather"
+    assert CC.plan_comm(fft, 1, "cols").mode == "halo"  # fits on one rank
+
+
+def test_forced_modes_validate():
+    stencil = make_graph(width=8, height=6, pattern="stencil")
+    fft = make_graph(width=8, height=6, pattern="fft")
+    with pytest.raises(ValueError, match="left-only"):
+        CC.plan_comm(stencil, 4, "cols", comm="ring")
+    with pytest.raises(ValueError, match="cannot cover reach"):
+        CC.plan_comm(fft, 4, "cols", comm="halo")
+    with pytest.raises(ValueError, match="unknown comm mode"):
+        CC.plan_comm(stencil, 4, "cols", comm="bogus")
+    assert CC.plan_comm(fft, 4, "cols", comm="allgather").mode == "allgather"
+
+
+def test_ragged_padding_dead_columns():
+    g = make_graph(width=10, height=8, pattern="stencil", iterations=4)
+    plan = CC.plan_comm(g, 4, "cols")
+    assert plan.ragged
+    assert (plan.padded_width, plan.local, plan.halo) == (12, 3, 1)
+    # dead columns: no work, no dependence rows
+    assert (plan.iters[:, 10:] == 0).all()
+    assert (plan.local_mats[:, 10:] == 0).all()
+    assert (plan.iters[:, :10] > 0).all()
+    assert plan.trim(np.arange(12)).shape == (10,)
+
+
+def test_width_smaller_than_ranks():
+    g = make_graph(width=4, height=6, pattern="sweep")
+    plan = CC.plan_comm(g, 8, "stage", prefer_ring=True)
+    assert (plan.padded_width, plan.local, plan.mode) == (8, 1, "ring")
+
+
+@pytest.mark.parametrize("pattern,kw", [
+    ("stencil", {}), ("sweep", {}), ("nearest", {"radix": 5}),
+])
+def test_local_matrices_reindex_correctly(pattern, kw):
+    """Every global dep (t, i) <- (t-1, j) lands at its context offset."""
+    g = make_graph(width=12, height=6, pattern=pattern, iterations=1, **kw)
+    plan = CC.plan_comm(g, 4, "cols")
+    assert plan.mode in ("halo", "ring")
+    lhalo = plan.halo
+    for t in range(g.height):
+        want = np.zeros((plan.padded_width, plan.context_width), np.uint8)
+        for i in range(g.width):
+            for j in g.deps(t, i):
+                want[i, j - ((i // plan.local) * plan.local - lhalo)] = 1
+        np.testing.assert_array_equal(plan.local_mats[t], want)
+
+
+def test_time_varying_pattern_analyzed_fully():
+    """fft's reach grows with t; the invariance short-circuit must not
+    clip the analysis to the first timestep."""
+    g = make_graph(width=16, height=5, pattern="fft")
+    assert not g.is_time_invariant()
+    assert CC.dependency_reach(g) == 8  # stride at the deepest level
+
+
+# ------------------------------------------------- production mesh spec
+def test_production_mesh_spec_grows_stage_axis():
+    assert production_mesh_spec() == ((16, 16), ("data", "model"))
+    assert production_mesh_spec(multi_pod=True) == \
+        ((2, 16, 16), ("pod", "data", "model"))
+    shape, axes = production_mesh_spec(multi_pod=True, pipeline_stages=4)
+    assert shape == (2, 4, 16, 4)
+    assert axes == ("pod", "data", "model", "stage")
+    assert np.prod(shape) == 512  # chip count preserved
+    with pytest.raises(ValueError, match="not divisible"):
+        production_mesh_spec(pipeline_stages=3)
