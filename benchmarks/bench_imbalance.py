@@ -6,24 +6,29 @@ executes masked full-length loops (cannot exploit short tasks — the
 BSP/MPI analogue); host dispatch runs true per-task durations and recovers
 part of the imbalance, the paper's asynchronous-scheduling benefit.
 
-Efficiency here is relative to each backend's own balanced peak, so the
-derived column isolates the imbalance penalty.
+Efficiency here is relative to each backend's own balanced peak (the
+balanced scenario's ``peak_rate`` pins the imbalanced sweep's baseline),
+so the derived column isolates the imbalance penalty.  Thin wrapper over
+``repro.bench``.
 """
 from __future__ import annotations
 
 from typing import List
 
-from .common import Row, metg_for
+from .common import BenchContext, Row, metg_for
 
 
-def run() -> List[Row]:
+def run(ctx: BenchContext = None) -> List[Row]:
+    ctx = ctx or BenchContext()
     rows: List[Row] = []
     for be, hi in (("xla-scan", 4096), ("host-dynamic", 512)):
-        base = metg_for(be, "nearest", radix=5, num_graphs=4,
-                        iterations_hi=hi, n_points=5, height=16)
-        imb = metg_for(be, "nearest", radix=5, num_graphs=4,
-                       iterations_hi=hi, n_points=5, height=16,
-                       imbalance=1.0, peak_rate=base.peak_rate)
+        base = metg_for(ctx, be, "nearest", name=f"imbalance.{be}.balanced",
+                        radix=5, num_graphs=4, iterations_hi=hi,
+                        n_points=5, height=16)
+        imb = metg_for(ctx, be, "nearest", name=f"imbalance.{be}.imbalanced",
+                       radix=5, num_graphs=4, iterations_hi=hi,
+                       n_points=5, height=16, imbalance=1.0,
+                       peak_rate=base.peak_rate)
         for p in sorted(imb.points, key=lambda p: -p.iterations):
             rows.append(Row(
                 f"imbalance.{be}.iters{p.iterations}",

@@ -2,25 +2,28 @@
 
 The paper's headline: the 0->3 dependency step costs MPI 12x; dynamic
 systems are hit hardest.  Here the same sweep contrasts the compiled
-backend (xla-scan) with per-task host dispatch.
+backend (xla-scan) with per-task host dispatch.  Thin wrapper over
+``repro.bench``.
 """
 from __future__ import annotations
 
 from typing import List
 
-from .common import Row, metg_for
+from .common import BenchContext, Row, metg_for
 
 RADII = [0, 1, 3, 5, 7, 9]
 
 
-def run() -> List[Row]:
+def run(ctx: BenchContext = None) -> List[Row]:
+    ctx = ctx or BenchContext()
     rows: List[Row] = []
     for be, hi in (("xla-scan", 4096), ("shardmap-csp", 4096),
                    ("host-dynamic", 1024)):
         base = None
         for r in RADII:
-            res = metg_for(be, "nearest", radix=r, iterations_hi=hi,
-                           n_points=6, width=10)
+            res = metg_for(ctx, be, "nearest",
+                           name=f"metg_deps.{be}.radix{r}",
+                           radix=r, iterations_hi=hi, n_points=6, width=10)
             metg_us = (res.metg or float("nan")) * 1e6
             if r == 0:
                 base = metg_us

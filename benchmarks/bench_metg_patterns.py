@@ -1,8 +1,9 @@
 """Paper Figure 9: METG(50%) per backend per dependence pattern.
 
 Patterns as in §V-C: (a) stencil, (b) nearest with 5 deps, (c) spread with
-5 deps, (d) 4 concurrent nearest graphs (task parallelism).  All four
-backends run all four patterns — the O(m+n) property in action.
+5 deps, (d) 4 concurrent nearest graphs (task parallelism, executed
+concurrently through ``Backend.run_many``).  All backends run all cases —
+the O(m+n) property in action.  Thin wrapper over ``repro.bench``.
 """
 from __future__ import annotations
 
@@ -10,7 +11,7 @@ from typing import List
 
 from repro.backends import backend_names
 
-from .common import Row, metg_for
+from .common import BenchContext, Row, metg_for
 
 CASES = [
     ("stencil", {}, 1),
@@ -20,14 +21,16 @@ CASES = [
 ]
 
 
-def run() -> List[Row]:
+def run(ctx: BenchContext = None) -> List[Row]:
+    ctx = ctx or BenchContext()
     rows: List[Row] = []
     for be in backend_names():
         hi = 1024 if be == "host-dynamic" else 4096
         for case, kw, ngraphs in CASES:
             pattern = "nearest" if case == "nearest_x4" else case
-            res = metg_for(be, pattern, num_graphs=ngraphs,
-                           iterations_hi=hi, n_points=6, **kw)
+            res = metg_for(ctx, be, pattern, name=f"metg.{be}.{case}",
+                           num_graphs=ngraphs, iterations_hi=hi,
+                           n_points=6, **kw)
             metg_us = (res.metg or float("nan")) * 1e6
             rows.append(Row(f"metg.{be}.{case}", metg_us,
                             f"peak_flops_per_s={res.peak_rate:.4g}"))

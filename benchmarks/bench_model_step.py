@@ -6,6 +6,9 @@ dispatch floor — the granularity below which the JAX dispatch overhead
 (python + runtime) eats >50% of the step.  This is the number a user needs
 to pick microbatch sizes on real hardware, and the direct analogue of the
 paper's §V-C question asked of this framework itself.
+
+Not a task-graph scenario (the "graph" here is the model), but timing goes
+through ``repro.bench.time_run`` and smoke mode comes from the context.
 """
 from __future__ import annotations
 
@@ -13,43 +16,49 @@ import time
 from typing import List
 
 import jax
-import numpy as np
 
+from repro.bench import time_run
 from repro.configs import get_config, reduced
 from repro.data.pipeline import DataConfig, make_batch
 from repro.train import train_step as TS
 
-from .common import Row
+from .common import BenchContext, Row
 
 ARCHS = ["qwen1.5-0.5b", "mixtral-8x7b", "mamba2-2.7b"]
+SEQS = (16, 64, 256)
 
 
-def run() -> List[Row]:
+def run(ctx: BenchContext = None) -> List[Row]:
+    ctx = ctx or BenchContext()
+    archs = ARCHS[:1] if ctx.smoke else ARCHS
+    seqs = SEQS[:1] if ctx.smoke else SEQS
+    repeats = 1 if ctx.smoke else 3
     rows: List[Row] = []
-    for arch in ARCHS:
+    for arch in archs:
         cfg = reduced(get_config(arch))
         tcfg = TS.TrainConfig(total_steps=100)
         state, _ = TS.init_state(jax.random.PRNGKey(0), cfg, tcfg)
         step = TS.jit_train_step(cfg, tcfg)
         per_layer = []
-        for seq in (16, 64, 256):
+        for seq in seqs:
             dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
                               global_batch=4,
                               embed_dim=cfg.d_model if cfg.frontend else 0)
             batch = make_batch(dcfg, 0)
             state, m = step(state, batch)  # compile
             jax.block_until_ready(m["loss"])
-            times = []
-            for _ in range(3):
-                t0 = time.perf_counter()
-                state, m = step(state, batch)
-                jax.block_until_ready(m["loss"])
-                times.append(time.perf_counter() - t0)
-            best = min(times)
+
+            def one_step():
+                nonlocal state
+                state, mm = step(state, batch)
+                jax.block_until_ready(mm["loss"])
+
+            best = time_run(one_step, repeats=repeats)
             gran = best / cfg.num_layers
             per_layer.append(gran)
             rows.append(Row(f"model_step.{arch}.seq{seq}", best * 1e6,
                             f"per_layer_task_us={gran * 1e6:.1f}"))
+
         # dispatch floor: empty jitted step
         @jax.jit
         def noop(x):

@@ -1,27 +1,30 @@
 """Paper Figure 11: efficiency vs task granularity for varying payloads.
 
-Spread pattern, 5 deps/task, 4 concurrent graphs; ``output_bytes`` sweeps
-the communication volume per dependency.  Compares the CSP backend (strict
-compute/communicate alternation, like MPI) against the whole-graph
-dataflow backend (XLA free to overlap/fuse) — the paper's asynchronous-
-systems-win-under-communication finding.
+Spread pattern, 5 deps/task, 4 concurrent graphs (through ``run_many``);
+``output_bytes`` sweeps the communication volume per dependency.  Compares
+the CSP backend (strict compute/communicate alternation, like MPI) against
+the whole-graph dataflow backend (XLA free to overlap/fuse) — the paper's
+asynchronous-systems-win-under-communication finding.  Thin wrapper over
+``repro.bench``.
 """
 from __future__ import annotations
 
 from typing import List
 
-from .common import Row, metg_for
+from .common import BenchContext, Row, metg_for
 
 BYTES = [16, 4096, 65536]
 
 
-def run() -> List[Row]:
+def run(ctx: BenchContext = None) -> List[Row]:
+    ctx = ctx or BenchContext()
     rows: List[Row] = []
     for be in ("shardmap-csp", "xla-static"):
         for ob in BYTES:
-            res = metg_for(be, "spread", radix=5, num_graphs=4,
-                           output_bytes=ob, iterations_hi=4096,
-                           n_points=6, height=24)
+            res = metg_for(ctx, be, "spread",
+                           name=f"overlap.{be}.bytes{ob}",
+                           radix=5, num_graphs=4, output_bytes=ob,
+                           iterations_hi=4096, n_points=6, height=24)
             for p in sorted(res.points, key=lambda p: -p.iterations):
                 rows.append(Row(
                     f"overlap.{be}.bytes{ob}.iters{p.iterations}",

@@ -2,31 +2,32 @@
 
 Sweeps task duration at fixed graph shape and reports achieved FLOP/s
 (compute kernel) and B/s (memory kernel, constant working set) — the
-100%-efficiency baselines every METG below is measured against.
+100%-efficiency baselines every METG below is measured against.  Thin
+wrapper over ``repro.bench`` scenarios with an explicit sweep schedule.
 """
 from __future__ import annotations
 
 from typing import List
 
-from repro.backends import get_backend
-from repro.core import compute_metg, geometric_iterations, make_graph, run_sweep
+from repro.bench import ScenarioSpec, SweepControls, geometric_iterations
 
-from .common import Row
+from .common import BenchContext, Row
 
 
-def _sweep(kernel: str, iterations_hi: int, **kw) -> List[Row]:
-    be = get_backend("xla-scan")
-
-    def graphs_at(iters):
-        return [make_graph(width=8, height=32, pattern="stencil",
-                           kernel=kernel, iterations=iters, **kw)]
-
-    def make_runner(iters):
-        return be.prepare(graphs_at(iters))
-
-    iters_list = geometric_iterations(iterations_hi, 4, 4.0)
-    pts = run_sweep(make_runner, graphs_at, iters_list, repeats=3)
-    res = compute_metg(pts)
+def _sweep(ctx: BenchContext, kernel: str, iterations_hi: int,
+           **graph_kw) -> List[Row]:
+    spec = ScenarioSpec(
+        name=f"peak.{kernel}",
+        backend="xla-scan",
+        pattern="stencil",
+        kernel=kernel,
+        width=8,
+        height=32,
+        graph_kw=tuple(sorted(graph_kw.items())),
+        sweep=SweepControls(
+            schedule=tuple(geometric_iterations(iterations_hi, 4, 4.0))),
+    )
+    res = ctx.run(spec).metg
     unit = "flops" if kernel == "compute" else "bytes"
     rows = [
         Row(f"peak_{kernel}.iters{p.iterations}",
@@ -40,8 +41,9 @@ def _sweep(kernel: str, iterations_hi: int, **kw) -> List[Row]:
     return rows
 
 
-def run() -> List[Row]:
-    rows = _sweep("compute", 65536)
-    rows += _sweep("memory", 2048, span_bytes=16 * 1024,
+def run(ctx: BenchContext = None) -> List[Row]:
+    ctx = ctx or BenchContext()
+    rows = _sweep(ctx, "compute", 65536)
+    rows += _sweep(ctx, "memory", 2048, span_bytes=16 * 1024,
                    scratch_bytes=1 << 20)
     return rows

@@ -4,40 +4,42 @@ On the 1-core CPU runtime, wall time cannot drop with added columns, but
 the paper's essential phenomenon — scaling curves compressing against the
 overhead floor at small problem sizes, with the floor's contour equal to
 the METG curve — is directly measurable: wall time vs per-task problem
-size at fixed shape flattens exactly where granularity hits METG.
+size at fixed shape flattens exactly where granularity hits METG.  Thin
+wrapper over ``repro.bench`` scenarios with an explicit sweep schedule.
 """
 from __future__ import annotations
 
 from typing import List
 
-from repro.backends import get_backend
-from repro.core import compute_metg, make_graph, run_sweep
+from repro.bench import ScenarioSpec, SweepControls
 
-from .common import Row
+from .common import BenchContext, Row
+
+SIZES = (4096, 1024, 256, 64, 16, 4, 1)
 
 
-def run() -> List[Row]:
+def run(ctx: BenchContext = None) -> List[Row]:
+    ctx = ctx or BenchContext()
     rows: List[Row] = []
     for width in (4, 16):
-        be = get_backend("xla-scan")
-
-        def graphs_at(iters, width=width):
-            return [make_graph(width=width, height=32, pattern="stencil",
-                               kernel="compute", iterations=iters)]
-
-        def make_runner(iters):
-            return be.prepare(graphs_at(iters))
-
-        sizes = [4096, 1024, 256, 64, 16, 4, 1]
-        pts = run_sweep(make_runner, graphs_at, sizes, repeats=3)
-        res = compute_metg(pts)
+        spec = ScenarioSpec(
+            name=f"scaling.w{width}",
+            backend="xla-scan",
+            pattern="stencil",
+            kernel="compute",
+            width=width,
+            height=32,
+            sweep=SweepControls(schedule=SIZES),
+        )
+        res = ctx.run(spec).metg
         for p in sorted(res.points, key=lambda q: -q.iterations):
             rows.append(Row(
                 f"scaling.w{width}.size{p.iterations}",
                 p.wall_time * 1e6,
                 f"granularity_us={p.granularity * 1e6:.2f};"
                 f"eff={p.efficiency:.3f}"))
+        num_tasks = res.points[0].num_tasks if res.points else 0
         rows.append(Row(f"scaling.w{width}.METG",
                         (res.metg or float("nan")) * 1e6,
-                        f"floor_wall_us={(res.metg or 0) * 32 * width * 1e6:.1f}"))
+                        f"floor_wall_us={(res.metg or 0) * num_tasks * 1e6:.1f}"))
     return rows

@@ -1,11 +1,17 @@
-"""Shared benchmark infrastructure.
+"""Shared benchmark infrastructure — thin glue over ``repro.bench``.
 
-Every bench module exposes ``run() -> List[Row]``; ``benchmarks.run``
+Every bench module exposes ``run(ctx) -> List[Row]``; ``benchmarks.run``
 aggregates and prints ``name,us_per_call,derived`` CSV (one row per
-measurement the paper's corresponding table/figure would plot).
+measurement the paper's corresponding table/figure would plot), while the
+``BenchContext`` writes a schema-checked ``BENCH_<scenario>.json`` per
+scenario so the perf trajectory is machine-readable across PRs.
+
+Smoke mode is carried by the context and becomes a *parameter* of each
+scenario's ``SweepControls`` (no module-level global): the resolved spec —
+recorded in the artifact — is exactly what was measured.
 
 CPU-runtime note (DESIGN.md §7): these are real wall-clock measurements of
-the four execution backends on the one-core CPU runtime — the paper's
+the execution backends on the one-core CPU runtime — the paper's
 comparative methodology (backends x patterns x granularity), not its Cori
 absolute numbers.  Production-mesh numbers live in EXPERIMENTS.md
 §Roofline, derived from the compiled dry-run.
@@ -13,16 +19,11 @@ absolute numbers.  Production-mesh numbers live in EXPERIMENTS.md
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional
 
-from repro.core import (TaskGraph, compute_metg, geometric_iterations,
-                        make_graph, run_sweep)
-from repro.backends import get_backend
-
-
-# CI smoke mode (benchmarks/run.py --smoke): shrink every METG sweep to a
-# few tiny points so the scripts stay exercised without real measurement.
-SMOKE = False
+from repro.bench import (METGResult, ScenarioResult, ScenarioSpec,
+                         SweepControls, Timer, run_scenario, write_bench_json)
+from repro.bench.artifact import artifact_path
 
 
 @dataclasses.dataclass
@@ -35,9 +36,38 @@ class Row:
         return f"{self.name},{self.us_per_call:.3f},{self.derived}"
 
 
+@dataclasses.dataclass
+class BenchContext:
+    """Per-invocation knobs: smoke mode, artifact sink, timer override."""
+
+    smoke: bool = False
+    artifacts_dir: Optional[str] = None
+    timer: Optional[Timer] = None  # None -> wall clock from sweep controls
+    written: List[str] = dataclasses.field(default_factory=list)
+
+    def run(self, spec: ScenarioSpec, peak_rate: Optional[float] = None,
+            ) -> ScenarioResult:
+        """Measure one scenario (smoke applied) and record its artifact."""
+        spec = spec.with_smoke(self.smoke or spec.sweep.smoke)
+        if self.artifacts_dir:
+            # fail before measuring (and before the earlier artifact would
+            # be clobbered): distinct names must map to distinct slugs
+            path = artifact_path(spec.slug, self.artifacts_dir)
+            if path in self.written:
+                raise ValueError(
+                    f"scenario {spec.name!r} would overwrite an earlier "
+                    f"artifact at {path}; pick names with distinct slugs")
+        result = run_scenario(spec, timer=self.timer, peak_rate=peak_rate)
+        if self.artifacts_dir:
+            self.written.append(write_bench_json(result, self.artifacts_dir))
+        return result
+
+
 def metg_for(
+    ctx: BenchContext,
     backend_name: str,
     pattern: str,
+    name: Optional[str] = None,
     width: int = 8,
     height: int = 32,
     iterations_hi: int = 4096,
@@ -50,27 +80,20 @@ def metg_for(
     threshold: float = 0.5,
     peak_rate: Optional[float] = None,
     **graph_kw,
-):
+) -> METGResult:
     """Run the paper's METG procedure for one (backend, pattern) cell."""
-    if SMOKE:
-        iterations_hi = min(iterations_hi, 64)
-        n_points = min(n_points, 3)
-        repeats = 1
-        height = min(height, 8)
-    be = get_backend(backend_name)
-
-    def graphs_at(iters: int):
-        g = make_graph(width=width, height=height, pattern=pattern,
-                       kernel=kernel, iterations=iters,
-                       output_bytes=output_bytes, imbalance=imbalance,
-                       **graph_kw)
-        return [g] * num_graphs
-
-    def make_runner(iters: int):
-        return be.prepare(graphs_at(iters))
-
-    factor = max(2.0, (iterations_hi) ** (1.0 / max(n_points - 1, 1)))
-    iters_list = geometric_iterations(iterations_hi, 1, factor)[:n_points]
-    points = run_sweep(make_runner, graphs_at, iters_list, cores=1,
-                       repeats=repeats)
-    return compute_metg(points, threshold=threshold, peak_rate=peak_rate)
+    spec = ScenarioSpec(
+        name=name or f"metg.{backend_name}.{pattern}",
+        backend=backend_name,
+        pattern=pattern,
+        kernel=kernel,
+        width=width,
+        height=height,
+        output_bytes=output_bytes,
+        imbalance=imbalance,
+        ngraphs=num_graphs,
+        graph_kw=tuple(sorted(graph_kw.items())),
+        sweep=SweepControls(iterations_hi=iterations_hi, n_points=n_points,
+                            repeats=repeats, threshold=threshold),
+    )
+    return ctx.run(spec, peak_rate=peak_rate).metg

@@ -1,6 +1,9 @@
 """Benchmark registry: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
+Prints ``name,us_per_call,derived`` CSV and writes one schema-checked
+``BENCH_<scenario>.json`` per scenario (see ``repro.bench.artifact``) into
+``--artifacts`` so the perf trajectory is collected across PRs.  Mapping to
+the paper:
 
   bench_peak             Figures 2/6 (peak FLOP/s), Figure 8 (peak B/s)
   bench_metg_patterns    Figure 9 (METG x backend x pattern)
@@ -13,6 +16,8 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One:     ``PYTHONPATH=src python -m benchmarks.run --only bench_metg_deps``
+Smoke (CI): ``... --smoke`` — tiny sweeps, one repeat, shallow graphs;
+smoke is a parameter of each scenario's ``SweepControls``, not a global.
 """
 from __future__ import annotations
 
@@ -32,17 +37,21 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    from .common import BenchContext
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated bench module names")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweeps for CI: few points, one repeat")
-    args = ap.parse_args()
+    ap.add_argument("--artifacts", default="results/bench",
+                    help="directory for BENCH_<scenario>.json artifacts "
+                         "('' disables)")
+    args = ap.parse_args(argv)
     mods = args.only.split(",") if args.only else MODULES
-    if args.smoke:
-        from . import common
-        common.SMOKE = True
+    ctx = BenchContext(smoke=args.smoke,
+                       artifacts_dir=args.artifacts or None)
 
     print("name,us_per_call,derived")
     failures = []
@@ -50,7 +59,7 @@ def main() -> None:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.time()
         try:
-            rows = mod.run()
+            rows = mod.run(ctx)
         except Exception as e:  # keep the suite running
             failures.append((name, e))
             print(f"{name}.ERROR,0,{type(e).__name__}: {e}", flush=True)
@@ -58,6 +67,8 @@ def main() -> None:
         for row in rows:
             print(row.csv(), flush=True)
         print(f"{name}.elapsed,{(time.time() - t0) * 1e6:.0f},", flush=True)
+    for path in ctx.written:
+        print(f"artifact,0,{path}", flush=True)
     if failures:
         sys.exit(1)
 

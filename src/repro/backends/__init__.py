@@ -13,7 +13,8 @@ unchanged, and is validated against the numpy oracle in core.validate.
 The two shard_map backends share the ``repro.dist.collectives`` comm-
 planning layer (ring/halo/allgather modes, ragged-width padding).
 """
-from .base import Backend, backend_names, get_backend, register_backend
+from .base import (Backend, StackedProgramBackend, backend_names,
+                   get_backend, register_backend)
 from .csp import CSPBackend, PlannedSPMDBackend
 from .dataflow import DataflowBackend
 from .host import HostBackend
@@ -22,6 +23,7 @@ from .scanvec import ScanBackend
 
 __all__ = [
     "Backend",
+    "StackedProgramBackend",
     "backend_names",
     "get_backend",
     "register_backend",

@@ -36,7 +36,15 @@ def get_backend(name: str, **kwargs) -> "Backend":
 
 
 class Backend:
-    """Executes task graphs. Subclasses implement ``prepare``."""
+    """Executes task graphs. Subclasses implement ``prepare``.
+
+    ``prepare`` runs the graphs *independently* (one program each, or one
+    sequential program); ``prepare_many`` is the concurrent entry point for
+    multi-graph scenarios (paper Fig 9d: task parallelism) — backends that
+    can overlap graphs override it (stacked graph dimension on the
+    vectorized backends, interleaved wavefronts on host/CSP), and the
+    default falls back to ``prepare``.
+    """
 
     name = "base"
     # paper Table 4 analogue, reported by benchmarks:
@@ -46,5 +54,72 @@ class Backend:
         """Compile/stage the workload; returned callable blocks on finish."""
         raise NotImplementedError
 
+    def prepare_many(self, graphs: Sequence[TaskGraph]) -> Callable[[], List[np.ndarray]]:
+        """Stage ``graphs`` for *concurrent* execution (default: ``prepare``)."""
+        return self.prepare(graphs)
+
     def run(self, graphs: Sequence[TaskGraph]) -> List[np.ndarray]:
         return self.prepare(graphs)()
+
+    def run_many(self, graphs: Sequence[TaskGraph]) -> List[np.ndarray]:
+        """Execute ``graphs`` concurrently; per-graph outputs, same order."""
+        return self.prepare_many(graphs)()
+
+    def lowered_hlo(self, graphs: Sequence[TaskGraph]) -> List[str]:
+        """Optimized HLO of the compiled program(s) ``run_many`` executes.
+
+        Empty when the backend has no whole-graph program (host dispatch).
+        The dry-run timer feeds these to ``launch.roofline.analyze_hlo``.
+        """
+        return []
+
+
+class StackedProgramBackend(Backend):
+    """Shared scaffolding for single-device whole-program backends.
+
+    Subclasses provide ``_compile(graphs) -> (compiled, *args)`` (one
+    program, per-graph outputs) and ``_compile_stacked(graphs) ->
+    (compiled, *args) | None`` (one program over a leading graph axis,
+    when the graphs can share a task body); everything else — runners,
+    the concurrent fallback, HLO exposure — lives here so the scan and
+    dataflow backends cannot drift apart.
+    """
+
+    def _compile(self, graphs: Sequence[TaskGraph]):
+        raise NotImplementedError
+
+    def _compile_stacked(self, graphs: Sequence[TaskGraph]):
+        return None  # no stacked form: prepare_many falls back to prepare
+
+    def prepare(self, graphs: Sequence[TaskGraph]):
+        import jax
+
+        compiled, *args = self._compile(graphs)
+
+        def runner() -> List[np.ndarray]:
+            outs = compiled(*args)
+            return [np.asarray(jax.block_until_ready(o)) for o in outs]
+
+        return runner
+
+    def prepare_many(self, graphs: Sequence[TaskGraph]):
+        import jax
+
+        graphs = list(graphs)
+        built = self._compile_stacked(graphs)
+        if built is None:
+            return self.prepare(graphs)
+        compiled, *args = built
+
+        def runner() -> List[np.ndarray]:
+            out = np.asarray(jax.block_until_ready(compiled(*args)))
+            return [out[k] for k in range(out.shape[0])]
+
+        return runner
+
+    def lowered_hlo(self, graphs: Sequence[TaskGraph]) -> List[str]:
+        graphs = list(graphs)
+        built = self._compile_stacked(graphs)
+        if built is not None:
+            return [built[0].as_text()]
+        return [self._compile(graphs)[0].as_text()]

@@ -14,7 +14,7 @@ folding, so the kernel loop is always executed at run time.
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -161,4 +161,33 @@ def graph_static_inputs(graph: TaskGraph) -> Tuple[np.ndarray, np.ndarray]:
          for t in range(graph.height)],
         dtype=np.int32,
     )
+    return mats, iters
+
+
+def stackable(graphs: Sequence[TaskGraph]) -> bool:
+    """Can these graphs share one vectorized program with a graph axis?
+
+    The task body closes over shape (width/payload) and kernel spec; the
+    dependence matrices and iteration counts are data.  So graphs stack iff
+    those static parts agree — patterns may differ freely.
+    """
+    if len(graphs) < 2:
+        return False
+    g0 = graphs[0]
+    return all(
+        g.width == g0.width
+        and g.height == g0.height
+        and g.output_bytes == g0.output_bytes
+        and g.kernel == g0.kernel
+        for g in graphs[1:]
+    )
+
+
+def stacked_static_inputs(
+    graphs: Sequence[TaskGraph],
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Static inputs with a leading graph axis: (G,H,W,W) u8, (G,H,W) i32."""
+    per_graph = [graph_static_inputs(g) for g in graphs]
+    mats = np.stack([m for m, _ in per_graph])
+    iters = np.stack([i for _, i in per_graph])
     return mats, iters

@@ -67,7 +67,7 @@ class PlannedSPMDBackend(Backend):
 
         return runner
 
-    def _prepare_one(self, graph: TaskGraph):
+    def _compile_one(self, graph: TaskGraph):
         plan = self.plan(graph)
         local, Pels = plan.local, graph.payload_elems
         lmats_j = jnp.asarray(plan.local_mats)
@@ -104,12 +104,83 @@ class PlannedSPMDBackend(Backend):
         )
         fn = jax.jit(shmapped)
         compiled = fn.lower(lmats_j, iters_j).compile()
+        return compiled, plan, lmats_j, iters_j
+
+    def _prepare_one(self, graph: TaskGraph):
+        compiled, plan, lmats_j, iters_j = self._compile_one(graph)
 
         def run_one():
             out = jax.block_until_ready(compiled(lmats_j, iters_j))
             return plan.trim(out)
 
         return run_one
+
+    def _compile_combined(self, graphs: Sequence[TaskGraph]):
+        """One shard_map program interleaving every graph's wavefront.
+
+        Each scan step exchanges and executes timestep ``t`` of *all*
+        graphs, so XLA may overlap one graph's ppermute/all_gather with
+        another's kernels — the rank-parallel form of task parallelism.
+        Requires a common height (the shared clock); None otherwise.
+        """
+        if len(graphs) < 2 or len({g.height for g in graphs}) != 1:
+            return None
+        plans = [self.plan(g) for g in graphs]
+        height = graphs[0].height
+        dynamics = [p.local == 1 for p in plans]
+        lmats = tuple(jnp.asarray(p.local_mats) for p in plans)
+        iters = tuple(jnp.asarray(p.iters) for p in plans)
+
+        def rank_program(lmats_l, iters_l):
+            colss = tuple(p.local_cols() for p in plans)
+            payloads = tuple(
+                pcast(jnp.zeros((p.local, g.payload_elems), jnp.float32),
+                      (self.axis,), to="varying")
+                for p, g in zip(plans, graphs))
+
+            def step(carry, xs):
+                t, mats_t, its_t = xs
+                new = tuple(
+                    body.timestep(g, t, p.exchange(c), m, it,
+                                  cols=cols, dynamic=dyn)
+                    for g, p, c, m, it, cols, dyn in zip(
+                        graphs, plans, carry, mats_t, its_t, colss, dynamics))
+                return new, None
+
+            ts = jnp.arange(height, dtype=jnp.uint32)
+            final, _ = jax.lax.scan(step, payloads, (ts, lmats_l, iters_l))
+            return final
+
+        shmapped = shard_map(
+            rank_program,
+            mesh=self.mesh,
+            in_specs=(tuple(P(None, self.axis, None) for _ in plans),
+                      tuple(P(None, self.axis) for _ in plans)),
+            out_specs=tuple(P(self.axis, None) for _ in plans),
+            check_vma=not any(dynamics),
+        )
+        compiled = jax.jit(shmapped).lower(lmats, iters).compile()
+        return compiled, plans, lmats, iters
+
+    def prepare_many(self, graphs: Sequence[TaskGraph]):
+        graphs = list(graphs)
+        built = self._compile_combined(graphs)
+        if built is None:
+            return self.prepare(graphs)
+        compiled, plans, lmats, iters = built
+
+        def runner() -> List[np.ndarray]:
+            outs = jax.block_until_ready(compiled(lmats, iters))
+            return [np.asarray(p.trim(o)) for p, o in zip(plans, outs)]
+
+        return runner
+
+    def lowered_hlo(self, graphs: Sequence[TaskGraph]) -> List[str]:
+        graphs = list(graphs)
+        built = self._compile_combined(graphs)
+        if built is not None:
+            return [built[0].as_text()]
+        return [self._compile_one(g)[0].as_text() for g in graphs]
 
 
 @register_backend("shardmap-csp")

@@ -15,17 +15,17 @@ import numpy as np
 
 from ..core.graph import TaskGraph
 from . import body
-from .base import Backend, register_backend
+from .base import StackedProgramBackend, register_backend
 
 
 @register_backend("xla-static")
-class DataflowBackend(Backend):
+class DataflowBackend(StackedProgramBackend):
     paradigm = "static dataflow (PTG/Regent analogue)"
 
     def __init__(self, donate: bool = True):
         self.donate = donate
 
-    def prepare(self, graphs: Sequence[TaskGraph]):
+    def _compile(self, graphs: Sequence[TaskGraph]):
         statics = [body.graph_static_inputs(g) for g in graphs]
 
         def program(all_mats, all_iters):
@@ -41,9 +41,28 @@ class DataflowBackend(Backend):
         mats_in = [jnp.asarray(m) for m, _ in statics]
         iters_in = [jnp.asarray(i) for _, i in statics]
         compiled = fn.lower(mats_in, iters_in).compile()
+        return compiled, mats_in, iters_in
 
-        def runner() -> List[np.ndarray]:
-            outs = compiled(mats_in, iters_in)
-            return [np.asarray(jax.block_until_ready(o)) for o in outs]
+    def _compile_stacked(self, graphs: Sequence[TaskGraph]):
+        """Concurrent form: the unrolled schedule advances a stacked
+        (graph, width) payload, so every timestep of every graph sits in one
+        static program and XLA schedules them together.  None if the graphs
+        cannot share a task body."""
+        if not body.stackable(graphs):
+            return None
+        g0 = graphs[0]
+        mats, iters = body.stacked_static_inputs(graphs)
+        mats_in = jnp.asarray(mats)    # (G, H, W, W)
+        iters_in = jnp.asarray(iters)  # (G, H, W)
 
-        return runner
+        def program(mats_a, iters_a):
+            payload = jnp.zeros((len(graphs), g0.width, g0.payload_elems),
+                                jnp.float32)
+            for t in range(g0.height):  # unrolled: static schedule
+                payload = jax.vmap(
+                    lambda p, m, iv: body.timestep(g0, t, p, m, iv)
+                )(payload, mats_a[:, t], iters_a[:, t])
+            return payload
+
+        compiled = jax.jit(program).lower(mats_in, iters_in).compile()
+        return compiled, mats_in, iters_in

@@ -24,6 +24,25 @@ from .base import Backend, register_backend
 class HostBackend(Backend):
     paradigm = "dynamic per-task host dispatch (Dask/Spark analogue)"
 
+    @staticmethod
+    def _dispatch_timestep(g: TaskGraph, fn, iters, store, t: int, radix: int):
+        """Issue every task of timestep ``t`` (and retire timestep t-2)."""
+        for i in range(g.width):
+            deps = g.deps(t, i)
+            pads = jnp.zeros((radix, g.payload_elems), jnp.float32)
+            if deps:
+                stacked = jnp.stack([store[(t - 1, j)] for j in deps])
+                pads = pads.at[: len(deps)].set(stacked)
+            store[(t, i)] = fn(
+                jnp.uint32(t),
+                jnp.uint32(i),
+                jnp.int32(iters[t, i]),
+                pads,
+                jnp.int32(len(deps)),
+            )
+        for i in range(g.width):
+            store.pop((t - 2, i), None)
+
     def prepare(self, graphs: Sequence[TaskGraph]):
         task_fns = [self._compile_task(g) for g in graphs]
         statics = [body.graph_static_inputs(g) for g in graphs]
@@ -34,22 +53,41 @@ class HostBackend(Backend):
                 radix = max(1, g.max_radix())
                 store: Dict[Tuple[int, int], jax.Array] = {}
                 for t in range(g.height):
-                    for i in range(g.width):
-                        deps = g.deps(t, i)
-                        pads = jnp.zeros((radix, g.payload_elems), jnp.float32)
-                        if deps:
-                            stacked = jnp.stack([store[(t - 1, j)] for j in deps])
-                            pads = pads.at[: len(deps)].set(stacked)
-                        store[(t, i)] = fn(
-                            jnp.uint32(t),
-                            jnp.uint32(i),
-                            jnp.int32(iters[t, i]),
-                            pads,
-                            jnp.int32(len(deps)),
-                        )
-                    for i in range(g.width):
-                        store.pop((t - 2, i), None)
+                    self._dispatch_timestep(g, fn, iters, store, t, radix)
                 row = jnp.stack([store[(g.height - 1, i)] for i in range(g.width)])
+                finals.append(np.asarray(jax.block_until_ready(row)))
+            return finals
+
+        return runner
+
+    def prepare_many(self, graphs: Sequence[TaskGraph]):
+        """Concurrent execution: wavefronts of the graphs interleave.
+
+        A dynamic scheduler with several ready task graphs issues whichever
+        tasks are runnable; here the host walks timesteps outermost and
+        dispatches every graph's timestep-t tasks before any graph's t+1,
+        so the async JAX dispatch queue holds work from all graphs at once
+        (the paper's task-parallelism scenario, Fig 9d).
+        """
+        graphs = list(graphs)
+        if len(graphs) <= 1:
+            return self.prepare(graphs)
+        task_fns = [self._compile_task(g) for g in graphs]
+        statics = [body.graph_static_inputs(g) for g in graphs]
+        radii = [max(1, g.max_radix()) for g in graphs]
+
+        def runner() -> List[np.ndarray]:
+            stores: List[Dict[Tuple[int, int], jax.Array]] = [
+                {} for _ in graphs]
+            for t in range(max(g.height for g in graphs)):
+                for g, fn, (mats, iters), store, radix in zip(
+                        graphs, task_fns, statics, stores, radii):
+                    if t < g.height:
+                        self._dispatch_timestep(g, fn, iters, store, t, radix)
+            finals: List[np.ndarray] = []
+            for g, store in zip(graphs, stores):
+                row = jnp.stack(
+                    [store[(g.height - 1, i)] for i in range(g.width)])
                 finals.append(np.asarray(jax.block_until_ready(row)))
             return finals
 

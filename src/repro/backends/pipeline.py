@@ -13,7 +13,9 @@ Because the comm-planning layer is shared, the backend is not limited to
 sweeps: graphs whose deps also reach right fall back to the plan's
 ``halo`` exchange, and wide patterns (fft/spread/random) to
 ``allgather`` — so the backend joins the full benchmark matrix
-(every pattern x every backend) unmodified.
+(every pattern x every backend) unmodified.  Multi-graph scenarios
+(``run_many``) inherit ``PlannedSPMDBackend``'s combined program: every
+pipeline advances one clock tick per scan step, rings interleaved.
 """
 from __future__ import annotations
 

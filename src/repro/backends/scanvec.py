@@ -15,14 +15,15 @@ import numpy as np
 
 from ..core.graph import TaskGraph
 from . import body
-from .base import Backend, register_backend
+from .base import StackedProgramBackend, register_backend
 
 
 @register_backend("xla-scan")
-class ScanBackend(Backend):
+class ScanBackend(StackedProgramBackend):
     paradigm = "compiled timestep loop (OpenMP-forall analogue)"
 
-    def prepare(self, graphs: Sequence[TaskGraph]):
+    def _compile(self, graphs: Sequence[TaskGraph]):
+        """One program scanning each graph in turn (independent execution)."""
         statics = [body.graph_static_inputs(g) for g in graphs]
 
         def program(all_mats, all_iters):
@@ -44,9 +45,33 @@ class ScanBackend(Backend):
         mats_in = [jnp.asarray(m) for m, _ in statics]
         iters_in = [jnp.asarray(i) for _, i in statics]
         compiled = fn.lower(mats_in, iters_in).compile()
+        return compiled, mats_in, iters_in
 
-        def runner() -> List[np.ndarray]:
-            outs = compiled(mats_in, iters_in)
-            return [np.asarray(jax.block_until_ready(o)) for o in outs]
+    def _compile_stacked(self, graphs: Sequence[TaskGraph]):
+        """One scan over a stacked (graph, width) payload — the concurrent
+        form: all graphs advance in the same compiled timestep (multi-graph
+        scenarios, paper Fig 9d).  None if the graphs cannot share a body."""
+        if not body.stackable(graphs):
+            return None
+        g0 = graphs[0]
+        mats, iters = body.stacked_static_inputs(graphs)
+        mats_t = jnp.asarray(mats.transpose(1, 0, 2, 3))  # (H, G, W, W)
+        iters_t = jnp.asarray(iters.transpose(1, 0, 2))   # (H, G, W)
 
-        return runner
+        def program(mats_a, iters_a):
+            init = jnp.zeros((len(graphs), g0.width, g0.payload_elems),
+                             jnp.float32)
+            ts = jnp.arange(g0.height, dtype=jnp.uint32)
+
+            def step(payload, xs):
+                t, mat, it = xs
+                new = jax.vmap(
+                    lambda p, m, iv: body.timestep(g0, t, p, m, iv)
+                )(payload, mat, it)
+                return new, None
+
+            final, _ = jax.lax.scan(step, init, (ts, mats_a, iters_a))
+            return final
+
+        compiled = jax.jit(program).lower(mats_t, iters_t).compile()
+        return compiled, mats_t, iters_t

@@ -1,0 +1,51 @@
+"""First-class METG measurement (paper §IV-V as a subsystem, not scripts).
+
+- ``metg``     — the pure metric math: sweep points, efficiency curves,
+                 METG crossover (re-exported by ``repro.core.metg``)
+- ``scenario`` — declarative ``ScenarioSpec`` / ``SweepControls``
+                 (pattern x kernel x payload x imbalance x ngraphs x backend)
+- ``timers``   — the ``Timer`` protocol: wall clock, synthetic fake clock,
+                 compiled dry-run roofline model
+- ``sweep``    — ``run_scenario``: spec + timer -> ``ScenarioResult``
+- ``artifact`` — schema-checked ``BENCH_<scenario>.json`` writer
+
+``benchmarks/*.py`` are thin wrappers over this package; multi-graph
+scenarios (``ngraphs >= 2``) execute concurrently through
+``Backend.run_many``.
+"""
+# .metg must be imported first: repro.core.metg re-exports it, and the
+# other submodules here import repro.core, so a partially-initialized
+# package must already expose the pure math.
+from .metg import (METGResult, SweepPoint, compute_metg, efficiency_curve,
+                   geometric_iterations, observed_peak, run_sweep,
+                   sweep_point, time_run)
+from .scenario import ScenarioSpec, SweepControls
+from .timers import DryRunTimer, SyntheticTimer, Timer, WallClockTimer
+from .sweep import ScenarioResult, run_scenario
+from .artifact import (SCHEMA_VERSION, bench_artifact, read_bench_json,
+                       validate_artifact, write_bench_json)
+
+__all__ = [
+    "METGResult",
+    "SweepPoint",
+    "compute_metg",
+    "efficiency_curve",
+    "geometric_iterations",
+    "observed_peak",
+    "run_sweep",
+    "sweep_point",
+    "time_run",
+    "ScenarioSpec",
+    "SweepControls",
+    "Timer",
+    "WallClockTimer",
+    "SyntheticTimer",
+    "DryRunTimer",
+    "ScenarioResult",
+    "run_scenario",
+    "SCHEMA_VERSION",
+    "bench_artifact",
+    "read_bench_json",
+    "validate_artifact",
+    "write_bench_json",
+]

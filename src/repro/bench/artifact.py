@@ -1,0 +1,157 @@
+"""Machine-readable benchmark artifacts: ``BENCH_<scenario>.json``.
+
+One JSON file per scenario, schema-versioned, carrying the resolved spec,
+the timer used, the full efficiency curve and the METG — everything a later
+PR (or the CI artifact collector) needs to track the perf trajectory
+without re-parsing CSV stdout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict
+
+from .sweep import ScenarioResult
+
+SCHEMA_VERSION = 1
+
+# field name -> required type(s); None-able fields listed separately
+_POINT_FIELDS = {
+    "iterations": int,
+    "num_tasks": int,
+    "wall_time_s": (int, float),
+    "useful_work": (int, float),
+    "granularity_s": (int, float),
+    "rate": (int, float),
+    "efficiency": (int, float),
+}
+_SCENARIO_FIELDS = {
+    "name": str,
+    "backend": str,
+    "pattern": str,
+    "kernel": str,
+    "width": int,
+    "height": int,
+    "output_bytes": int,
+    "imbalance": (int, float),
+    "ngraphs": int,
+    "cores": int,
+    "graph_kw": dict,
+    "sweep": dict,
+}
+
+
+def bench_artifact(result: ScenarioResult) -> Dict:
+    """The JSON-serializable artifact for one scenario result."""
+    spec = result.spec
+    sweep = dataclasses.asdict(spec.sweep)
+    sweep["schedule"] = (list(spec.sweep.schedule)
+                        if spec.sweep.schedule is not None else None)
+    return {
+        "schema": SCHEMA_VERSION,
+        "kind": "metg_sweep",
+        "scenario": {
+            "name": spec.name,
+            "backend": spec.backend,
+            "pattern": spec.pattern,
+            "kernel": spec.kernel,
+            "width": spec.width,
+            "height": spec.height,
+            "output_bytes": spec.output_bytes,
+            "imbalance": spec.imbalance,
+            "ngraphs": spec.ngraphs,
+            "cores": spec.cores,
+            "graph_kw": dict(spec.graph_kw),
+            "sweep": sweep,
+        },
+        "timer": result.timer,
+        # authoritative measurement parameters (a timer override supersedes
+        # spec.sweep's warmup/repeats/percentile; this records what ran)
+        "timer_config": dict(result.timer_config),
+        "threshold": result.metg.threshold,
+        "peak_rate": result.metg.peak_rate,
+        "metg_s": result.metg.metg,
+        "points": [
+            {
+                "iterations": p.iterations,
+                "num_tasks": p.num_tasks,
+                "wall_time_s": p.wall_time,
+                "useful_work": p.useful_work,
+                "granularity_s": p.granularity,
+                "rate": p.rate,
+                "efficiency": p.efficiency,
+            }
+            for p in sorted(result.points, key=lambda p: -p.iterations)
+        ],
+    }
+
+
+def _typed(v, t) -> bool:
+    """isinstance with bools rejected for numeric fields (bool <: int)."""
+    if isinstance(v, bool):
+        return False
+    return isinstance(v, t)
+
+
+def validate_artifact(doc: Dict) -> Dict:
+    """Schema check (raises ValueError); returns ``doc`` for chaining."""
+
+    def need(cond, msg):
+        if not cond:
+            raise ValueError(f"invalid bench artifact: {msg}")
+
+    need(isinstance(doc, dict), "not an object")
+    need(doc.get("schema") == SCHEMA_VERSION,
+         f"schema must be {SCHEMA_VERSION}, got {doc.get('schema')!r}")
+    need(doc.get("kind") == "metg_sweep", f"unknown kind {doc.get('kind')!r}")
+    # any non-empty name is valid: Timer is an open protocol (custom
+    # timers must not be rejected at the artifact layer)
+    need(isinstance(doc.get("timer"), str) and doc.get("timer"),
+         f"timer must be a non-empty string, got {doc.get('timer')!r}")
+    need(isinstance(doc.get("timer_config"), dict), "timer_config")
+    need(_typed(doc.get("threshold"), (int, float)), "threshold")
+    need(_typed(doc.get("peak_rate"), (int, float)), "peak_rate")
+    need("metg_s" in doc, "metg_s missing (null means no crossing)")
+    need(doc["metg_s"] is None or _typed(doc["metg_s"], (int, float)),
+         "metg_s")
+    sc = doc.get("scenario")
+    need(isinstance(sc, dict), "scenario missing")
+    for k, t in _SCENARIO_FIELDS.items():
+        if t is str:  # identity fields must be non-empty (mirrors the spec)
+            need(isinstance(sc.get(k), str) and sc.get(k),
+                 f"scenario.{k} must be a non-empty string")
+        elif t is dict:
+            need(isinstance(sc.get(k), t), f"scenario.{k} must be {t}")
+        else:
+            need(_typed(sc.get(k), t), f"scenario.{k} must be {t}")
+    pts = doc.get("points")
+    need(isinstance(pts, list) and pts, "points must be a non-empty list")
+    for n, p in enumerate(pts):
+        need(isinstance(p, dict), f"points[{n}] not an object")
+        for k, t in _POINT_FIELDS.items():
+            need(_typed(p.get(k), t), f"points[{n}].{k} must be {t}")
+    return doc
+
+
+def artifact_path(slug: str, outdir: str) -> str:
+    """Where ``write_bench_json`` will put a scenario's artifact."""
+    return os.path.join(outdir, f"BENCH_{slug}.json")
+
+
+def write_bench_json(result: ScenarioResult, outdir: str) -> str:
+    """Write ``BENCH_<scenario>.json`` (validated); returns the path."""
+    doc = validate_artifact(bench_artifact(result))
+    os.makedirs(outdir, exist_ok=True)
+    path = artifact_path(result.spec.slug, outdir)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def read_bench_json(path: str) -> Dict:
+    with open(path) as f:
+        return validate_artifact(json.load(f))

@@ -1,0 +1,164 @@
+"""Pluggable timers: how a scenario's wall time is produced.
+
+One ``Timer`` protocol, three implementations spanning the measurement
+spectrum:
+
+``WallClockTimer``
+    Real measurement: prepares the backend's concurrent program
+    (``Backend.prepare_many``) and times repeated blocking executions,
+    with warmup and percentile controls (0 = paper-style best-of-N).
+
+``SyntheticTimer``
+    The deterministic fake clock: the paper's overhead model
+    ``wall = sum_tasks (overhead + iterations * seconds_per_iteration)``
+    evaluated in closed form.  No JAX, no timing noise — CI asserts exact
+    METG crossovers against the analytic curve.
+
+``DryRunTimer``
+    Compiled dry-run cost model: lowers the backend's program, walks the
+    optimized HLO with ``launch.roofline.analyze_hlo``, and reports the
+    binding roofline term (compute / HBM / interconnect) as the wall
+    time.  Deterministic given a compiler version; no execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Protocol, Sequence, runtime_checkable
+
+from ..core.graph import TaskGraph
+
+
+@runtime_checkable
+class Timer(Protocol):
+    """Produces the wall time of one complete multi-graph execution."""
+
+    name: str
+
+    def measure(self, backend_name: str, graphs: Sequence[TaskGraph]) -> float:
+        """Seconds for one blocking execution of ``graphs`` (concurrently)."""
+        ...
+
+
+def timer_config(timer: Timer) -> Dict[str, object]:
+    """The timer's public parameters, for the artifact record.
+
+    A custom (non-dataclass) Timer may expose its own ``config()`` dict;
+    otherwise its settings are unrecorded (empty dict).
+    """
+    if hasattr(timer, "config") and callable(timer.config):
+        return dict(timer.config())
+    if dataclasses.is_dataclass(timer):
+        return {f.name: getattr(timer, f.name)
+                for f in dataclasses.fields(timer)
+                if f.repr and f.name != "name"}
+    return {}
+
+
+def cached_backend(cache: Dict[str, object], backend_name: str):
+    """Per-timer backend cache (avoids re-building meshes per sweep point)."""
+    if backend_name not in cache:
+        from ..backends import get_backend
+
+        cache[backend_name] = get_backend(backend_name)
+    return cache[backend_name]
+
+
+def pick_sample(samples: Sequence[float], percentile: float) -> float:
+    """Select the reported time: <=0 -> min (best-of-N), else percentile."""
+    if not samples:
+        raise ValueError("no timing samples")
+    if percentile <= 0:
+        return min(samples)
+    ordered = sorted(samples)
+    idx = max(0, min(len(ordered) - 1,
+                     math.ceil(percentile / 100.0 * len(ordered)) - 1))
+    return ordered[idx]
+
+
+@dataclass
+class WallClockTimer:
+    """Times real backend executions (prepare once, run repeatedly)."""
+
+    warmup: int = 1
+    repeats: int = 3
+    percentile: float = 0.0  # 0 => best-of-repeats
+    name: str = field(default="wallclock", init=False)
+    _backends: Dict[str, object] = field(default_factory=dict, repr=False)
+
+    def measure(self, backend_name: str, graphs: Sequence[TaskGraph]) -> float:
+        runner = cached_backend(self._backends, backend_name).prepare_many(graphs)
+        for _ in range(max(self.warmup, 0)):
+            runner()
+        samples: List[float] = []
+        for _ in range(max(self.repeats, 1)):
+            t0 = time.perf_counter()
+            runner()
+            samples.append(time.perf_counter() - t0)
+        return pick_sample(samples, self.percentile)
+
+
+@dataclass
+class SyntheticTimer:
+    """Closed-form fake clock: ``tasks * (overhead + iters * per_iter)``.
+
+    Imbalance-aware (uses each task's true duration), dependency-aware when
+    ``seconds_per_dependency`` is set, and independent of the backend — the
+    same model ``tests/test_metg.py`` builds points from by hand, so METG
+    crossovers are exactly predictable: efficiency hits 50 % where
+    ``iters * seconds_per_iteration == overhead_per_task``, i.e. at
+    granularity ``2 * overhead_per_task``.
+    """
+
+    overhead_per_task: float = 20e-6
+    seconds_per_iteration: float = 50e-9
+    seconds_per_dependency: float = 0.0
+    name: str = field(default="synthetic", init=False)
+
+    def measure(self, backend_name: str, graphs: Sequence[TaskGraph]) -> float:
+        wall = 0.0
+        for g in graphs:
+            wall += (g.num_tasks * self.overhead_per_task
+                     + g.total_iterations() * self.seconds_per_iteration)
+            if self.seconds_per_dependency > 0:
+                ndeps = int(g.dependence_matrices().sum())
+                wall += ndeps * self.seconds_per_dependency
+        return wall
+
+
+@dataclass
+class DryRunTimer:
+    """Roofline cost model over the backend's compiled HLO.
+
+    Requires a backend that exposes its compiled programs
+    (``Backend.lowered_hlo``); host-dynamic dispatch has no whole-graph
+    program and is not supported.  ``dispatch_overhead_s`` charges a fixed
+    launch cost per compiled program (per-graph programs pay it per graph).
+    """
+
+    dispatch_overhead_s: float = 0.0
+    name: str = field(default="dryrun", init=False)
+    _backends: Dict[str, object] = field(default_factory=dict, repr=False)
+
+    def measure(self, backend_name: str, graphs: Sequence[TaskGraph]) -> float:
+        from ..launch.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS,
+                                       analyze_hlo)
+
+        texts = cached_backend(self._backends, backend_name).lowered_hlo(graphs)
+        if not texts:
+            raise ValueError(
+                f"backend {backend_name!r} does not expose compiled HLO; "
+                "the dry-run timer needs a whole-graph program "
+                "(use wallclock or synthetic timers instead)")
+        # programs execute back-to-back, so each one's *own* binding term
+        # is summed (max-of-sums would let one program's compute hide
+        # another's communication)
+        wall = 0.0
+        for text in texts:
+            a = analyze_hlo(text)
+            wall += max(a["flops"] / PEAK_FLOPS,
+                        a["hbm_bytes"] / HBM_BW,
+                        a["collectives"]["total"] / LINK_BW)
+        return max(wall, 1e-12) + self.dispatch_overhead_s * len(texts)

@@ -3,7 +3,8 @@
 - graph: 2-D iteration space + dependence relation + self-validating body
 - patterns: trivial/stencil/fft/sweep/tree/random/nearest/spread relations
 - kernel_spec / kernel_ref: compute- and memory-bound task kernels
-- metg: minimum-effective-task-granularity harness (paper §IV)
+- metg: minimum-effective-task-granularity metric (paper §IV) —
+  re-exported from ``repro.bench.metg``, where measurement now lives
 - validate: numpy oracle executor + backend output checks
 """
 from .graph import CHECKSUM_MOD, TaskGraph, make_graph, replicate

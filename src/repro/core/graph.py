@@ -176,16 +176,27 @@ class TaskGraph:
     def num_tasks(self) -> int:
         return self.width * self.height
 
+    def total_iterations(self) -> int:
+        """Total kernel iterations across all tasks, imbalance-aware.
+
+        The single definition of aggregate task duration, shared by the
+        useful-work accounting below and the synthetic timing model
+        (``repro.bench.timers.SyntheticTimer``).
+        """
+        k = self.kernel
+        if k.imbalance <= 0:
+            return k.iterations * self.num_tasks
+        return sum(
+            self.task_iterations(t, i)
+            for t in range(self.height)
+            for i in range(self.width)
+        )
+
     def total_useful_work(self) -> float:
         """Total FLOPs (or bytes) across all tasks, imbalance-aware."""
         k = self.kernel
         per_iter = k.useful_work() / max(k.iterations, 1)
-        total_iters = sum(
-            self.task_iterations(t, i)
-            for t in range(self.height)
-            for i in range(self.width)
-        ) if k.imbalance > 0 else k.iterations * self.num_tasks
-        return per_iter * total_iters
+        return per_iter * self.total_iterations()
 
 
 def make_graph(

@@ -1,146 +1,23 @@
-"""Minimum Effective Task Granularity — the paper's §IV metric.
+"""METG metric — compatibility re-export.
 
-METG(e) for a workload is the smallest *average task granularity* (wall time
-x cores / #tasks) at which the workload still achieves at least fraction
-``e`` of its best observed rate (FLOP/s for compute kernels, B/s for memory
-kernels).
-
-The harness sweeps task duration (kernel iterations) from large to small at
-fixed graph shape and hardware (paper: "measured in place"), replots the
-points on (granularity, efficiency) axes and log-interpolates the 50 %
-crossing, exactly as paper Figures 2-3 construct it.
+The implementation moved to ``repro.bench.metg`` when measurement became a
+first-class subsystem (``repro.bench``): the metric math is pure and the
+harness around it (scenarios, timers, artifacts) lives with it.  This
+module keeps the historical ``repro.core.metg`` / ``repro.core`` import
+surface working unchanged.
 """
 from __future__ import annotations
 
-import math
-import time
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from ..bench.metg import (METGResult, SweepPoint, compute_metg,
+                          efficiency_curve, geometric_iterations, run_sweep,
+                          time_run)
 
-from .graph import TaskGraph
-
-
-@dataclass
-class SweepPoint:
-    iterations: int
-    wall_time: float  # seconds, best of repeats
-    num_tasks: int
-    useful_work: float  # FLOPs or bytes
-    granularity: float = 0.0  # seconds per task (x cores)
-    rate: float = 0.0  # work / second
-    efficiency: float = 0.0  # rate / peak_rate
-
-
-@dataclass
-class METGResult:
-    metg: Optional[float]  # seconds; None if curve never crosses
-    threshold: float
-    peak_rate: float
-    points: List[SweepPoint] = field(default_factory=list)
-
-    def csv_rows(self) -> List[str]:
-        rows = []
-        for p in sorted(self.points, key=lambda p: -p.iterations):
-            rows.append(
-                f"{p.iterations},{p.wall_time:.6e},{p.granularity:.6e},"
-                f"{p.rate:.6e},{p.efficiency:.4f}"
-            )
-        return rows
-
-
-def time_run(fn: Callable[[], None], repeats: int = 3) -> float:
-    """Best-of-N wall time of fn() (fn must block until complete)."""
-    best = math.inf
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
-
-
-def run_sweep(
-    make_runner: Callable[[int], Callable[[], None]],
-    graphs_at: Callable[[int], Sequence[TaskGraph]],
-    iterations_list: Sequence[int],
-    cores: int = 1,
-    repeats: int = 3,
-) -> List[SweepPoint]:
-    """Measure wall time for each task duration in the sweep.
-
-    ``make_runner(iters)`` returns a zero-arg callable that executes the
-    workload to completion (compile/warmup must happen before timing: the
-    harness invokes the runner once untimed).
-    """
-    points = []
-    for iters in iterations_list:
-        graphs = list(graphs_at(iters))
-        runner = make_runner(iters)
-        runner()  # warmup / compile
-        wall = time_run(runner, repeats=repeats)
-        num_tasks = sum(g.num_tasks for g in graphs)
-        work = sum(g.total_useful_work() for g in graphs)
-        points.append(
-            SweepPoint(
-                iterations=iters,
-                wall_time=wall,
-                num_tasks=num_tasks,
-                useful_work=work,
-                granularity=wall * cores / num_tasks,
-            )
-        )
-    return points
-
-
-def compute_metg(
-    points: Sequence[SweepPoint],
-    threshold: float = 0.5,
-    peak_rate: Optional[float] = None,
-) -> METGResult:
-    """Replot on (granularity, efficiency) axes and find the crossing.
-
-    ``peak_rate`` defaults to the best rate observed in the sweep itself
-    (paper §V-A: the empirically-achieved peak is the 100 % baseline).
-    """
-    pts = [SweepPoint(**vars(p)) for p in points]
-    for p in pts:
-        p.rate = p.useful_work / p.wall_time if p.wall_time > 0 else 0.0
-    if peak_rate is None:
-        peak_rate = max((p.rate for p in pts), default=0.0)
-    if peak_rate <= 0:
-        return METGResult(metg=None, threshold=threshold, peak_rate=0.0, points=pts)
-    for p in pts:
-        p.efficiency = p.rate / peak_rate
-
-    # The smallest granularity still >= threshold; if the next smaller
-    # point dips below, log-interpolate the crossing (robust to small
-    # non-monotonicity from timing noise).
-    ordered = sorted(pts, key=lambda p: -p.granularity)
-    above = [p for p in ordered if p.efficiency >= threshold]
-    if not above:
-        return METGResult(metg=None, threshold=threshold,
-                          peak_rate=peak_rate, points=pts)
-    prev = above[-1]  # smallest granularity at/above threshold
-    metg: Optional[float] = prev.granularity
-    below = [p for p in ordered
-             if p.granularity < prev.granularity and p.efficiency < threshold]
-    if below:
-        p = below[0]  # largest-granularity point below threshold
-        if prev.efficiency > p.efficiency and p.granularity > 0:
-            lo_g, hi_g = math.log(p.granularity), math.log(prev.granularity)
-            lo_e, hi_e = p.efficiency, prev.efficiency
-            frac = (threshold - lo_e) / (hi_e - lo_e)
-            metg = math.exp(lo_g + frac * (hi_g - lo_g))
-    return METGResult(metg=metg, threshold=threshold, peak_rate=peak_rate, points=pts)
-
-
-def geometric_iterations(hi: int, lo: int = 1, factor: float = 2.0) -> List[int]:
-    """Sweep schedule: hi, hi/f, ... down to lo (deduplicated)."""
-    out, x = [], float(hi)
-    while x >= lo:
-        v = max(lo, int(round(x)))
-        if not out or v != out[-1]:
-            out.append(v)
-        x /= factor
-    if out[-1] != lo:
-        out.append(lo)
-    return out
+__all__ = [
+    "METGResult",
+    "SweepPoint",
+    "compute_metg",
+    "efficiency_curve",
+    "geometric_iterations",
+    "run_sweep",
+    "time_run",
+]

@@ -1,0 +1,299 @@
+"""repro.bench: scenarios, timers, deterministic METG, artifacts.
+
+The fake-clock (``SyntheticTimer``) tests assert exact METG crossovers
+against the closed-form efficiency curve — no wall-clock measurement, so
+nothing here is timing-flaky in CI.
+"""
+import json
+import os
+
+import pytest
+
+from repro.bench import (DryRunTimer, ScenarioSpec, SweepControls,
+                         SyntheticTimer, Timer, WallClockTimer,
+                         bench_artifact, read_bench_json, run_scenario,
+                         validate_artifact, write_bench_json)
+from repro.bench.scenario import (SMOKE_HEIGHT, SMOKE_ITERATIONS_HI,
+                                  SMOKE_N_POINTS)
+from repro.bench.timers import pick_sample
+
+
+# ---------------------------------------------------------------- scenarios
+def test_scenario_compiles_to_graphs():
+    spec = ScenarioSpec(name="s", pattern="nearest", width=6, height=9,
+                        ngraphs=3, output_bytes=64, imbalance=0.5,
+                        graph_kw=(("radix", 5),))
+    graphs = spec.graphs(iterations=7)
+    assert len(graphs) == 3
+    g = graphs[0]
+    assert (g.width, g.height, g.pattern) == (6, 9, "nearest")
+    assert g.kernel.iterations == 7 and g.kernel.imbalance == 0.5
+    assert g.output_bytes == 64
+    assert dict(g.pattern_params)["radix"] == 5
+
+
+def test_scenario_requires_name_and_graphs():
+    with pytest.raises(ValueError):
+        ScenarioSpec(name="")
+    with pytest.raises(ValueError):
+        ScenarioSpec(name="x", ngraphs=0)
+
+
+def test_sweep_controls_validate_eagerly():
+    """Bad controls fail at spec construction, not deep inside the sweep."""
+    with pytest.raises(ValueError):
+        SweepControls(iterations_hi=0)
+    with pytest.raises(ValueError):
+        SweepControls(iterations_hi=4, iterations_lo=8)
+    with pytest.raises(ValueError):
+        SweepControls(iterations_lo=0)
+    with pytest.raises(ValueError):
+        SweepControls(n_points=0)
+    with pytest.raises(ValueError):
+        SweepControls(schedule=())
+    with pytest.raises(ValueError):
+        SweepControls(schedule=(16, 0))
+    # smoke resolution must cap the floor along with the ceiling
+    # (regression: replace() re-validates hi >= lo)
+    r = SweepControls(iterations_hi=4096, iterations_lo=128,
+                      smoke=True).resolved()
+    assert r.iterations_hi >= r.iterations_lo
+
+
+def test_sweep_schedule_geometric_and_explicit():
+    c = SweepControls(iterations_hi=4096, n_points=6)
+    sched = c.iteration_schedule()
+    assert len(sched) == 6 and sched[0] == 4096
+    assert all(a > b for a, b in zip(sched, sched[1:]))
+    assert SweepControls(schedule=(100, 10, 1)).iteration_schedule() == \
+        [100, 10, 1]
+
+
+def test_smoke_is_a_spec_parameter_not_a_global():
+    spec = ScenarioSpec(name="s", height=32,
+                        sweep=SweepControls(iterations_hi=65536, n_points=9,
+                                            repeats=5, smoke=True))
+    r = spec.resolved()
+    assert r.height == SMOKE_HEIGHT
+    assert r.sweep.iterations_hi == SMOKE_ITERATIONS_HI
+    assert r.sweep.n_points == SMOKE_N_POINTS
+    assert r.sweep.repeats == 1
+    # explicit schedules are capped and truncated too
+    c = SweepControls(schedule=(65536, 4096, 64, 16, 4, 1), smoke=True)
+    sched = c.iteration_schedule()
+    assert len(sched) <= SMOKE_N_POINTS
+    assert max(sched) <= SMOKE_ITERATIONS_HI
+    # the original spec is untouched (frozen, declarative)
+    assert spec.height == 32 and spec.sweep.iterations_hi == 65536
+
+
+# ------------------------------------------------------- deterministic METG
+def test_fake_clock_metg_finds_analytic_crossover():
+    """wall = tasks*(o + w*i) crosses 50 % efficiency at granularity 2*o."""
+    o, w = 1e-5, 1e-8
+    spec = ScenarioSpec(name="fake", backend="unused-by-synthetic-timer",
+                        pattern="trivial", width=8, height=32,
+                        sweep=SweepControls(iterations_hi=1 << 20,
+                                            n_points=21))
+    res = run_scenario(spec, timer=SyntheticTimer(
+        overhead_per_task=o, seconds_per_iteration=w))
+    assert res.timer == "synthetic"
+    assert res.metg_s == pytest.approx(2 * o, rel=0.15)
+
+
+def test_fake_clock_metg_threshold_ordering():
+    spec = ScenarioSpec(name="fake", pattern="trivial", width=8, height=32,
+                        sweep=SweepControls(iterations_hi=1 << 20,
+                                            n_points=21, threshold=0.9))
+    timer = SyntheticTimer(overhead_per_task=1e-5, seconds_per_iteration=1e-8)
+    m90 = run_scenario(spec, timer=timer).metg_s
+    spec50 = ScenarioSpec(name="fake", pattern="trivial", width=8, height=32,
+                          sweep=SweepControls(iterations_hi=1 << 20,
+                                              n_points=21, threshold=0.5))
+    m50 = run_scenario(spec50, timer=timer).metg_s
+    assert m90 > m50  # higher efficiency demands coarser tasks
+
+
+def test_fake_clock_metg_none_when_pinned_peak_unreachable():
+    spec = ScenarioSpec(name="fake", pattern="trivial", width=8, height=16,
+                        sweep=SweepControls(iterations_hi=1024, n_points=6))
+    timer = SyntheticTimer(overhead_per_task=1e-3,
+                           seconds_per_iteration=1e-9)
+    work_rate = spec.graph(1).kernel.flops_per_task / 1  # flops per iter
+    res = run_scenario(spec, timer=timer,
+                       peak_rate=work_rate / 1e-9 * 2)  # impossible peak
+    assert res.metg_s is None
+
+
+def test_fake_clock_is_imbalance_aware():
+    timer = SyntheticTimer(overhead_per_task=0.0, seconds_per_iteration=1e-6)
+    spec = ScenarioSpec(name="fake", pattern="trivial", width=4, height=4)
+    balanced = timer.measure("any", spec.graphs(100))
+    imb = ScenarioSpec(name="fake", pattern="trivial", width=4, height=4,
+                       imbalance=1.0)
+    imbalanced = timer.measure("any", imb.graphs(100))
+    assert imbalanced < balanced  # shorter tasks -> less synthetic work
+
+
+# ------------------------------------------------------------------ timers
+def test_timer_protocol_runtime_checkable():
+    assert isinstance(WallClockTimer(), Timer)
+    assert isinstance(SyntheticTimer(), Timer)
+    assert isinstance(DryRunTimer(), Timer)
+
+
+def test_custom_timer_flows_through_to_artifact(tmp_path):
+    """Timer is an open protocol: a user-defined timer runs a scenario and
+    its artifact validates (the artifact layer must not whitelist names)."""
+
+    class TickTimer:
+        name = "tick"
+
+        def config(self):
+            return {"tick_s": 1e-3}
+
+        def measure(self, backend_name, graphs):
+            return 1e-3 * sum(g.num_tasks for g in graphs)
+
+    spec = ScenarioSpec(name="custom.timer", pattern="trivial",
+                        width=4, height=4,
+                        sweep=SweepControls(iterations_hi=16, n_points=3))
+    res = run_scenario(spec, timer=TickTimer())
+    doc = read_bench_json(write_bench_json(res, str(tmp_path)))
+    assert doc["timer"] == "tick"
+    assert doc["timer_config"] == {"tick_s": 1e-3}
+
+
+def test_pick_sample_percentiles():
+    samples = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert pick_sample(samples, 0.0) == 1.0      # best-of-N
+    assert pick_sample(samples, 50.0) == 3.0     # median
+    assert pick_sample(samples, 100.0) == 5.0    # worst case
+    with pytest.raises(ValueError):
+        pick_sample([], 0.0)
+
+
+def test_wallclock_timer_measures_real_run():
+    spec = ScenarioSpec(name="wc", backend="xla-scan", width=4, height=6)
+    t = WallClockTimer(warmup=1, repeats=2)
+    wall = t.measure(spec.backend, spec.graphs(4))
+    assert wall > 0
+
+
+def test_dryrun_timer_models_compiled_cost():
+    spec = ScenarioSpec(name="dr", backend="xla-scan", width=4, height=6)
+    t = DryRunTimer()
+    small = t.measure(spec.backend, spec.graphs(4))
+    big = t.measure(spec.backend, spec.graphs(4096))
+    assert 0 < small < big  # more kernel iterations -> more modeled time
+
+
+def test_dryrun_timer_rejects_hostonly_backend():
+    spec = ScenarioSpec(name="dr", backend="host-dynamic", width=4, height=4)
+    with pytest.raises(ValueError, match="compiled HLO"):
+        DryRunTimer().measure(spec.backend, spec.graphs(2))
+
+
+# --------------------------------------------------------------- artifacts
+def _tiny_result():
+    spec = ScenarioSpec(name="artifact/check v1", pattern="trivial",
+                        width=4, height=8, ngraphs=2,
+                        sweep=SweepControls(iterations_hi=256, n_points=5))
+    return run_scenario(spec, timer=SyntheticTimer())
+
+
+def test_artifact_schema_roundtrip(tmp_path):
+    res = _tiny_result()
+    path = write_bench_json(res, str(tmp_path))
+    assert os.path.basename(path) == "BENCH_artifact-check-v1.json"
+    doc = read_bench_json(path)  # validates
+    assert doc["schema"] == 1 and doc["kind"] == "metg_sweep"
+    assert doc["timer"] == "synthetic"
+    # the timer's actual parameters are recorded (authoritative over
+    # spec.sweep when a timer override was supplied)
+    assert doc["timer_config"]["overhead_per_task"] == \
+        SyntheticTimer().overhead_per_task
+    assert doc["scenario"]["ngraphs"] == 2
+    assert doc["points"][0]["iterations"] == 256
+    assert doc["metg_s"] == pytest.approx(res.metg_s)
+    effs = [p["efficiency"] for p in doc["points"]]
+    assert max(effs) == pytest.approx(1.0)
+
+
+def test_artifact_validation_rejects_corruption():
+    doc = bench_artifact(_tiny_result())
+    validate_artifact(doc)
+    for breakage in (
+        {"schema": 99},
+        {"kind": "nope"},
+        {"timer": ""},
+        {"timer_config": "not-a-dict"},
+        {"points": []},
+        {"scenario": {}},
+        {"threshold": True},  # bools must not pass as numerics
+        {"peak_rate": False},
+    ):
+        bad = {**doc, **breakage}
+        with pytest.raises(ValueError):
+            validate_artifact(bad)
+    bad = json.loads(json.dumps(doc))
+    del bad["points"][0]["efficiency"]
+    with pytest.raises(ValueError):
+        validate_artifact(bad)
+    bad = json.loads(json.dumps(doc))
+    bad["points"][0]["efficiency"] = False  # bool-as-numeric corruption
+    with pytest.raises(ValueError):
+        validate_artifact(bad)
+    bad = json.loads(json.dumps(doc))
+    del bad["metg_s"]  # missing key != legal null
+    with pytest.raises(ValueError):
+        validate_artifact(bad)
+    ok = json.loads(json.dumps(doc))
+    ok["metg_s"] = None  # no crossing is a valid result
+    validate_artifact(ok)
+
+
+# ------------------------------------------------- benchmarks CLI contract
+def test_benchmarks_smoke_emits_valid_artifacts(tmp_path, capsys):
+    """`python -m benchmarks.run --smoke` writes >= 1 schema-valid
+    BENCH_*.json (the acceptance contract for the CI artifact upload)."""
+    from benchmarks.run import main
+
+    main(["--smoke", "--only", "bench_scaling",
+          "--artifacts", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert "name,us_per_call,derived" in out
+    files = sorted(p for p in os.listdir(tmp_path)
+                   if p.startswith("BENCH_") and p.endswith(".json"))
+    assert files, "no BENCH_*.json emitted"
+    for f in files:
+        doc = read_bench_json(os.path.join(tmp_path, f))
+        assert doc["scenario"]["sweep"]["smoke"] is True
+
+
+def test_bench_context_threads_smoke_and_artifacts(tmp_path):
+    from benchmarks.common import BenchContext, metg_for
+
+    ctx = BenchContext(smoke=True, artifacts_dir=str(tmp_path),
+                       timer=SyntheticTimer())
+    res = metg_for(ctx, "xla-scan", "stencil", name="ctx.check",
+                   iterations_hi=4096, n_points=6)
+    assert res.peak_rate > 0
+    assert len(res.points) <= SMOKE_N_POINTS  # smoke reached the sweep
+    assert ctx.written and ctx.written[0].endswith("BENCH_ctx.check.json")
+    read_bench_json(ctx.written[0])
+
+
+def test_bench_context_rejects_slug_collision(tmp_path):
+    """Distinct scenario names that slugify identically must not silently
+    clobber each other's artifacts within one run — and the guard fires
+    *before* the earlier artifact is overwritten."""
+    from benchmarks.common import BenchContext, metg_for
+
+    ctx = BenchContext(smoke=True, artifacts_dir=str(tmp_path),
+                       timer=SyntheticTimer())
+    metg_for(ctx, "xla-scan", "trivial", name="clash x1")
+    with pytest.raises(ValueError, match="distinct slugs"):
+        metg_for(ctx, "xla-scan", "trivial", name="clash-x1")
+    # the first scenario's artifact survived intact
+    assert read_bench_json(ctx.written[0])["scenario"]["name"] == "clash x1"

@@ -81,6 +81,32 @@ print("RAGGEDOK")
     assert "RAGGEDOK" in out
 
 
+def test_run_many_combined_program_8dev():
+    """The combined multi-graph shard_map program (one scan interleaving
+    every graph's exchange+timestep) on 8 real ranks, ragged width, all
+    three comm modes — bit-exact against single-graph runs."""
+    out = run_sub("""
+import numpy as np
+from repro.core import make_graph, replicate, check_outputs, execute_reference
+from repro.backends import get_backend
+for bn in ("shardmap-csp", "shardmap-pipeline"):
+    be = get_backend(bn)
+    assert be.ndev == 8
+    for pattern, kw in (("stencil", {}), ("sweep", {}),
+                        ("spread", {"radix": 3})):
+        g = make_graph(width=10, height=8, pattern=pattern, iterations=4, **kw)
+        expected = execute_reference(g)
+        alone = np.asarray(be.run([g])[0])
+        outs = be.run_many(replicate(g, 3))
+        assert len(outs) == 3
+        for o in outs:
+            check_outputs(g, o, expected=expected)
+            assert (np.asarray(o)[:, :4] == alone[:, :4]).all()
+print("RUNMANY8OK")
+""")
+    assert "RUNMANY8OK" in out
+
+
 def test_pipeline_backend_ring_8dev():
     """Sweep-class graphs ride the one-directional ppermute ring."""
     out = run_sub("""

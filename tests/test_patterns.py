@@ -64,6 +64,41 @@ def test_matrix_matches_deps(pattern, width, t):
         assert sorted(np.nonzero(m[i])[0].tolist()) == g.deps(t, i)
 
 
+@settings(max_examples=25, deadline=None)
+@given(width=st.integers(1, 12), t=st.integers(0, 6))
+def test_matrix_matches_deps_every_registered_pattern(width, t):
+    """Matrix and set forms agree for *every* registered pattern at once
+    (a new pattern joins this check just by registering), and deps stay
+    inside [0, width)."""
+    for pattern in PATTERNS:
+        g = make_graph(width=width, height=t + 1, pattern=pattern,
+                       **_params_for(pattern))
+        m = g.dependence_matrix(t)
+        assert m.shape == (width, width)
+        for i in range(width):
+            deps = g.deps(t, i)
+            assert all(0 <= j < width for j in deps), (pattern, t, i)
+            assert sorted(np.nonzero(m[i])[0].tolist()) == deps, (pattern, t, i)
+
+
+@settings(max_examples=25, deadline=None)
+@given(width=st.integers(1, 12), height=st.integers(1, 10))
+def test_max_radix_is_true_upper_bound(width, height):
+    """max_radix bounds len(deps(t, i)) over the whole iteration space and
+    is attained (it is the exact max, not just an upper bound)."""
+    for pattern in PATTERNS:
+        g = make_graph(width=width, height=height, pattern=pattern,
+                       **_params_for(pattern))
+        radix = g.max_radix()
+        observed = max(
+            (len(g.deps(t, i))
+             for t in range(height) for i in range(width)),
+            default=0,
+        )
+        # equality: a true upper bound that is also attained (exact max)
+        assert radix == observed, (pattern, radix, observed)
+
+
 def test_pattern_shapes_match_paper_table2():
     """Spot-check the Table 2 relations."""
     g = make_graph(width=8, height=8, pattern="stencil")
