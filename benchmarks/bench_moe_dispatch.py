@@ -1,0 +1,51 @@
+"""MoE dispatch comm volume: SP-aware EP vs token replication.
+
+The `moe_dispatch` scenario (``repro.bench.moe``) measured the dry-run
+way: per-plane all-to-all bytes from the exact capacity math the kernel
+uses, scored against the interconnect roofline (``launch.roofline``).
+The headline number is the reduction ratio — SP-aware expert parallelism
+(``ep_mode="sp"``) moves 1/|model| of the replicated volume per plane
+(asserted, not just printed, in ``tests/test_bench.py`` and on the
+compiled HLO in ``tests/test_distributed.py``).
+
+When the local runtime has enough devices the compiled-HLO bytes are
+reported alongside the analytic model; on the 1-device CI runtime only
+the analytic numbers appear (they are verified equal to the HLO by the
+8-device tests).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from repro.bench import MoEDispatchSpec, moe_dispatch_report
+
+from .common import BenchContext, Row
+
+MESHES = [(4, 2), (2, 4)]          # (data, model)
+SMOKE_MESHES = [(4, 2)]
+
+
+def run(ctx: BenchContext = None) -> List[Row]:
+    ctx = ctx or BenchContext()
+    rows: List[Row] = []
+    for data, model in (SMOKE_MESHES if ctx.smoke else MESHES):
+        reports = {}
+        for ep_mode in ("replicated", "sp"):
+            spec = MoEDispatchSpec(data=data, model=model, ep_mode=ep_mode)
+            compiled = len(jax.devices()) >= data * model
+            rep = moe_dispatch_report(spec, compiled=compiled)
+            reports[ep_mode] = rep
+            derived = (f"a2a_bytes={rep['a2a_bytes']:.0f};"
+                       f"cap={rep['cap']:.0f};"
+                       f"planes={rep['dispatch_planes']:.0f}")
+            if "hlo_a2a_bytes" in rep:
+                derived += f";hlo_a2a_bytes={rep['hlo_a2a_bytes']:.0f}"
+            rows.append(Row(f"moe_dispatch.d{data}m{model}.{ep_mode}",
+                            rep["a2a_roofline_s"] * 1e6, derived))
+        ratio = (reports["replicated"]["a2a_bytes"]
+                 / reports["sp"]["a2a_bytes"])
+        rows.append(Row(f"moe_dispatch.d{data}m{model}.reduction", 0.0,
+                        f"a2a_ratio={ratio:.2f};model_axis={model}"))
+    return rows

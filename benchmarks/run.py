@@ -13,11 +13,19 @@ the paper:
   bench_scaling          Figures 4/5 (scaling contour = METG curve)
   bench_metg_validation  Figure 14 / Table 6 (METG predicts the limit)
   bench_model_step       §V-C applied to this framework's own dispatch
+  bench_moe_dispatch     MoE dispatch comm volume (SP-aware EP vs
+                         token replication, dry-run roofline)
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One:     ``PYTHONPATH=src python -m benchmarks.run --only bench_metg_deps``
 Smoke (CI): ``... --smoke`` — tiny sweeps, one repeat, shallow graphs;
 smoke is a parameter of each scenario's ``SweepControls``, not a global.
+
+Regression gate: ``--baseline <dir>`` diffs every written artifact against
+the committed snapshot (``repro.bench.compare``) and exits nonzero when a
+scenario regressed beyond ``--baseline-threshold``.  With
+``--timer synthetic`` the sweep runs on the deterministic fake clock, so
+the CI gate against ``benchmarks/baselines/`` is noise-free.
 """
 from __future__ import annotations
 
@@ -34,6 +42,7 @@ MODULES = [
     "bench_scaling",
     "bench_metg_validation",
     "bench_model_step",
+    "bench_moe_dispatch",
 ]
 
 
@@ -48,10 +57,29 @@ def main(argv=None) -> None:
     ap.add_argument("--artifacts", default="results/bench",
                     help="directory for BENCH_<scenario>.json artifacts "
                          "('' disables)")
+    ap.add_argument("--timer", choices=("wallclock", "synthetic"),
+                    default="wallclock",
+                    help="wallclock: real runs; synthetic: deterministic "
+                         "fake clock (machine-independent artifacts for "
+                         "the --baseline gate)")
+    ap.add_argument("--baseline", default=None,
+                    help="directory of committed BENCH_*.json to diff "
+                         "against; exit nonzero on regression")
+    ap.add_argument("--baseline-threshold", type=float, default=0.25,
+                    help="relative slowdown tolerated by --baseline")
     args = ap.parse_args(argv)
+    if args.baseline and not args.artifacts:
+        ap.error("--baseline requires --artifacts (the current run's "
+                 "artifacts are what gets compared)")
     mods = args.only.split(",") if args.only else MODULES
+    timer = None
+    if args.timer == "synthetic":
+        from repro.bench import SyntheticTimer
+
+        timer = SyntheticTimer()
     ctx = BenchContext(smoke=args.smoke,
-                       artifacts_dir=args.artifacts or None)
+                       artifacts_dir=args.artifacts or None,
+                       timer=timer)
 
     print("name,us_per_call,derived")
     failures = []
@@ -69,7 +97,33 @@ def main(argv=None) -> None:
         print(f"{name}.elapsed,{(time.time() - t0) * 1e6:.0f},", flush=True)
     for path in ctx.written:
         print(f"artifact,0,{path}", flush=True)
-    if failures:
+
+    regressed = False
+    if args.baseline:
+        from repro.bench import compare_dirs, format_report
+        from repro.bench.compare import bench_json_names, scenario_family
+
+        # a partial run (--only) only remeasures some scenario families;
+        # gate just those — baselines outside them were not run, and
+        # flagging them "missing" would fail every partial dev run
+        fams = None
+        if args.only:
+            fams = {scenario_family(p) for p in ctx.written}
+            skipped = [f for f in bench_json_names(args.baseline)
+                       if scenario_family(f) not in fams]
+            if skipped:
+                print(f"compare,0,skipping {len(skipped)} baseline "
+                      f"artifact(s) outside this partial run "
+                      f"(families {sorted({scenario_family(f) for f in skipped})})",
+                      flush=True)
+        results = compare_dirs(args.baseline, args.artifacts,
+                               rel_threshold=args.baseline_threshold,
+                               families=fams)
+        for line in format_report(results).splitlines():
+            print(f"compare,0,{line}", flush=True)
+        regressed = any(not r.ok for r in results)
+
+    if failures or regressed:
         sys.exit(1)
 
 

@@ -8,6 +8,10 @@
                  compiled dry-run roofline model
 - ``sweep``    — ``run_scenario``: spec + timer -> ``ScenarioResult``
 - ``artifact`` — schema-checked ``BENCH_<scenario>.json`` writer
+- ``compare``  — artifact diffing: the bench-regression gate
+                 (``benchmarks/run.py --baseline``)
+- ``moe``      — the ``moe_dispatch`` comm-volume scenario (SP-aware EP
+                 vs token replication, dry-run roofline)
 
 ``benchmarks/*.py`` are thin wrappers over this package; multi-graph
 scenarios (``ngraphs >= 2``) execute concurrently through
@@ -24,6 +28,11 @@ from .timers import DryRunTimer, SyntheticTimer, Timer, WallClockTimer
 from .sweep import ScenarioResult, run_scenario
 from .artifact import (SCHEMA_VERSION, bench_artifact, read_bench_json,
                        validate_artifact, write_bench_json)
+from .compare import (ComparisonResult, PointDelta, bench_json_names,
+                      compare_artifacts, compare_dirs, format_report,
+                      scenario_family)
+from .moe import (MoEDispatchSpec, analytic_a2a_bytes, lowered_moe_hlo,
+                  moe_dispatch_report)
 
 __all__ = [
     "METGResult",
@@ -48,4 +57,13 @@ __all__ = [
     "read_bench_json",
     "validate_artifact",
     "write_bench_json",
+    "ComparisonResult",
+    "PointDelta",
+    "compare_artifacts",
+    "compare_dirs",
+    "format_report",
+    "MoEDispatchSpec",
+    "analytic_a2a_bytes",
+    "lowered_moe_hlo",
+    "moe_dispatch_report",
 ]

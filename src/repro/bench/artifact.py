@@ -153,5 +153,17 @@ def write_bench_json(result: ScenarioResult, outdir: str) -> str:
 
 
 def read_bench_json(path: str) -> Dict:
+    """Read + schema-check one artifact.
+
+    Truncated or garbage files raise ``ValueError`` naming the path (not a
+    bare ``JSONDecodeError``), so corrupt artifacts fail the same way as
+    schema violations — callers catch one exception type.
+    """
     with open(path) as f:
-        return validate_artifact(json.load(f))
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as e:
+            raise ValueError(
+                f"invalid bench artifact: {path} is not valid JSON "
+                f"(truncated or garbage: {e})") from e
+    return validate_artifact(doc)

@@ -1,0 +1,187 @@
+"""Diff ``BENCH_<scenario>.json`` artifacts: the perf-regression gate.
+
+``compare_artifacts`` diffs one scenario's current artifact against a
+baseline with a *relative* threshold: the METG and each sweep point's
+recorded wall time (each point's value is already the repeats-reduced
+statistic — best-of-N or the configured percentile — so the per-point
+comparison is a median-style comparison, not a single noisy sample).
+Only slowdowns beyond the threshold regress; speedups are reported but
+never fail.
+
+``compare_dirs`` matches artifacts by filename across two directories —
+every baseline scenario must still exist and hold its numbers; scenarios
+that are *new* in the current run pass (they have no baseline yet).
+
+``benchmarks/run.py --baseline <dir>`` runs the comparison after a sweep
+and exits nonzero on any regression; CI runs it with the deterministic
+``--timer synthetic`` fake clock against the committed
+``benchmarks/baselines/`` snapshot, so the gate is noise-free: it trips
+on real changes to graph structure, task counts, or the sweep itself,
+not on runner jitter.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .artifact import read_bench_json
+
+DEFAULT_THRESHOLD = 0.25  # relative slowdown tolerated before failing
+
+
+def _rel_delta(baseline: float, current: float) -> float:
+    if baseline == 0:
+        return 0.0 if current == 0 else float("inf")
+    return (current - baseline) / baseline
+
+
+@dataclass(frozen=True)
+class PointDelta:
+    """One matched sweep point (same iteration count) across the diff."""
+
+    iterations: int
+    baseline_s: float
+    current_s: float
+    rel_delta: float
+    regressed: bool
+
+
+@dataclass
+class ComparisonResult:
+    """One scenario's diff: METG movement + per-point wall-time deltas."""
+
+    scenario: str
+    metg_baseline: Optional[float] = None
+    metg_current: Optional[float] = None
+    metg_rel_delta: Optional[float] = None
+    points: List[PointDelta] = field(default_factory=list)
+    regressions: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.regressions
+
+    def summary(self) -> str:
+        if self.ok:
+            d = self.metg_rel_delta
+            moved = f"metg{d:+.1%}" if d is not None else "no-metg"
+            return f"{self.scenario}: ok ({moved})"
+        return f"{self.scenario}: REGRESSION " + "; ".join(self.regressions)
+
+
+def compare_artifacts(baseline: Dict, current: Dict,
+                      rel_threshold: float = DEFAULT_THRESHOLD,
+                      ) -> ComparisonResult:
+    """Diff two validated artifact documents for the same scenario."""
+    if rel_threshold <= 0:
+        raise ValueError(f"rel_threshold must be > 0, got {rel_threshold}")
+    name = baseline["scenario"]["name"]
+    res = ComparisonResult(scenario=name)
+    for key in ("name", "backend", "pattern", "kernel"):
+        b, c = baseline["scenario"][key], current["scenario"][key]
+        if b != c:
+            res.regressions.append(
+                f"scenario.{key} changed: baseline {b!r} vs current {c!r}")
+    # wall-clock seconds vs a fake-clock baseline (or vice versa) is a
+    # meaningless diff, not a perf signal — refuse, don't gate
+    bt, ct = baseline["timer"], current["timer"]
+    if bt != ct:
+        res.regressions.append(
+            f"timer changed: baseline {bt!r} vs current {ct!r} "
+            f"(times are not comparable)")
+    if res.regressions:
+        return res  # identity mismatch: the numbers are not comparable
+
+    mb, mc = baseline["metg_s"], current["metg_s"]
+    res.metg_baseline, res.metg_current = mb, mc
+    if mb is not None and mc is not None:
+        res.metg_rel_delta = _rel_delta(mb, mc)
+        if res.metg_rel_delta > rel_threshold:
+            res.regressions.append(
+                f"METG {mb:.3e}s -> {mc:.3e}s "
+                f"(+{res.metg_rel_delta:.1%} > {rel_threshold:.0%})")
+    elif mb is not None and mc is None:
+        res.regressions.append(
+            f"METG no longer crosses the efficiency threshold "
+            f"(baseline {mb:.3e}s)")
+    # baseline None: the scenario never crossed before — any crossing now
+    # is an improvement, nothing to gate on
+
+    cur_points = {p["iterations"]: p for p in current["points"]}
+    for bp in baseline["points"]:
+        it = bp["iterations"]
+        cp = cur_points.get(it)
+        if cp is None:
+            res.regressions.append(f"sweep point iterations={it} missing")
+            continue
+        rel = _rel_delta(bp["wall_time_s"], cp["wall_time_s"])
+        regressed = rel > rel_threshold
+        res.points.append(PointDelta(
+            iterations=it, baseline_s=bp["wall_time_s"],
+            current_s=cp["wall_time_s"], rel_delta=rel, regressed=regressed))
+        if regressed:
+            res.regressions.append(
+                f"point iterations={it}: {bp['wall_time_s']:.3e}s -> "
+                f"{cp['wall_time_s']:.3e}s (+{rel:.1%} > {rel_threshold:.0%})")
+    return res
+
+
+def bench_json_names(dirpath: str) -> List[str]:
+    """Sorted BENCH_*.json filenames under ``dirpath``."""
+    return sorted(f for f in os.listdir(dirpath)
+                  if f.startswith("BENCH_") and f.endswith(".json"))
+
+
+def scenario_family(fname: str) -> str:
+    """The scenario family of a ``BENCH_<scenario>.json`` filename — the
+    slug segment before the first dot (``BENCH_metg.xla-scan.nearest.json``
+    -> ``"metg"``).  Scenarios of one family come from one bench module,
+    so a partial run (``--only``) covers whole families."""
+    base = os.path.basename(fname)
+    if base.startswith("BENCH_"):
+        base = base[len("BENCH_"):]
+    return base.split(".")[0]
+
+
+def compare_dirs(baseline_dir: str, current_dir: str,
+                 rel_threshold: float = DEFAULT_THRESHOLD,
+                 families: Optional[set] = None,
+                 ) -> List[ComparisonResult]:
+    """Diff every baseline artifact against its current counterpart.
+
+    A baseline artifact with no current counterpart is a regression (a
+    measured scenario silently disappeared); current artifacts without a
+    baseline are new scenarios and pass.  With ``families``, baseline
+    artifacts of other scenario families are skipped entirely — the
+    partial-run (``--only``) case, where the rest of the baseline was
+    never remeasured and "missing" means "not run", not "vanished".
+    Vanished-scenario detection is preserved *within* the families that
+    did run.
+    """
+    if not os.path.isdir(baseline_dir):
+        raise ValueError(f"baseline directory {baseline_dir!r} not found")
+    results: List[ComparisonResult] = []
+    for fname in bench_json_names(baseline_dir):
+        if families is not None and scenario_family(fname) not in families:
+            continue
+        base = read_bench_json(os.path.join(baseline_dir, fname))
+        cur_path = os.path.join(current_dir, fname)
+        if not os.path.exists(cur_path):
+            res = ComparisonResult(scenario=base["scenario"]["name"])
+            res.regressions.append(
+                f"artifact {fname} missing from current run")
+            results.append(res)
+            continue
+        results.append(compare_artifacts(base, read_bench_json(cur_path),
+                                         rel_threshold=rel_threshold))
+    return results
+
+
+def format_report(results: List[ComparisonResult]) -> str:
+    lines = [r.summary() for r in results]
+    bad = sum(0 if r.ok else 1 for r in results)
+    lines.append(f"compared {len(results)} scenario(s): "
+                 + ("all within threshold" if not bad
+                    else f"{bad} regression(s)"))
+    return "\n".join(lines)

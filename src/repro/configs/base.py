@@ -34,6 +34,12 @@ class ModelConfig:
     num_experts_per_tok: int = 0
     moe_capacity_factor: float = 1.25
     dense_residual_ff: int = 0          # Arctic: parallel dense MLP width
+    # expert-parallel dispatch mode for the a2a path (models.moe):
+    #   "replicated" — tokens replicated over `model`; dispatch a2a
+    #                  duplicated per model plane
+    #   "sp"         — SP-aware: each model plane all-to-alls only its
+    #                  sequence shard (per-plane a2a volume / |model|)
+    ep_mode: str = "replicated"
     # SSM (Mamba-2)
     ssm_state: int = 0
     ssm_headdim: int = 64

@@ -14,6 +14,7 @@ CONFIG = register(ModelConfig(
     block_pattern=("moe",),
     num_experts=8,
     num_experts_per_tok=2,
+    ep_mode="sp",         # SP-aware EP: per-plane dispatch a2a / |model|
     window=4096,          # sliding-window attention (Mistral lineage)
     rope_theta=1e6,
     subquadratic=True,    # SWA bounds the KV working set -> long_500k runs

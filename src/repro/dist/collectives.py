@@ -14,7 +14,8 @@ into one reusable object, ``CommPlan``:
   widths up to the next multiple with *dead columns* (zero dependence
   rows, zero iterations) so any width runs on any rank count — the
   paper's MPI implementation handles ragged columns the same way;
-* **movement** — three modes, selected automatically from the reach:
+* **movement** — four modes, the first three selected automatically from
+  the reach:
 
   ====================  =====================================================
   ``ring``              one-directional ``ppermute`` toward higher ranks —
@@ -24,16 +25,28 @@ into one reusable object, ``CommPlan``:
                         exchange (stencil/nearest reach fits in a halo)
   ``allgather``         full payload-row gather — the MPI_Allgather
                         fallback for wide patterns (fft/spread/random)
+  ``a2a``               per-pair ``all_to_all``: each rank sends every other
+                        rank exactly the payload rows that rank's columns
+                        depend on (MPI_Alltoallv analogue); send/recv counts
+                        form a permutation — tokens are conserved
   ====================  =====================================================
 
 ``CommPlan.exchange`` executes the planned movement *inside* ``shard_map``;
 ``CommPlan.local_mats`` are the dependence matrices re-indexed into each
-rank's context window ``[left halo | local block | right halo]``.
+rank's context window (``[left halo | local block | right halo]`` for the
+ppermute modes, ``[recv buffers | local block]`` for ``a2a``).
+
+This module also owns the *dynamic* token all-to-all used by MoE expert
+parallelism (``TokenA2APlan``): the same dispatch planning — capacity
+sizing, slotting, per-destination buffers, forward/reverse ``all_to_all``
+— with the destination of each row decided at runtime by the router
+instead of statically by the dependence matrices.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+import math
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +54,7 @@ import numpy as np
 
 from ..core.graph import TaskGraph
 
-MODES = ("auto", "ring", "halo", "allgather")
+MODES = ("auto", "ring", "halo", "allgather", "a2a")
 
 
 def _dep_offsets(graph: TaskGraph) -> np.ndarray:
@@ -85,7 +98,7 @@ class CommPlan:
     and are sliced away by ``trim``.
     """
 
-    mode: str            # "ring" | "halo" | "allgather"
+    mode: str            # "ring" | "halo" | "allgather" | "a2a"
     axis: str            # mesh axis name the ranks live on
     ndev: int
     width: int           # real graph width
@@ -94,10 +107,20 @@ class CommPlan:
     halo: int            # exchange width (0 => no communication)
     local_mats: np.ndarray   # (H, padded_width, ctx) uint8
     iters: np.ndarray        # (H, padded_width) int32
+    # a2a mode only: [src, dst] row counts and padded send-row indices
+    send_counts: Optional[np.ndarray] = None   # (ndev, ndev) int64
+    a2a_cap: int = 0                           # rows per (src, dst) buffer
+    a2a_send_idx: Optional[np.ndarray] = None  # (ndev, ndev, cap) int32
 
     @property
     def ragged(self) -> bool:
         return self.padded_width != self.width
+
+    @property
+    def recv_counts(self) -> Optional[np.ndarray]:
+        """[dst, src] rows received — the transpose of ``send_counts``:
+        every row sent is received exactly once (token conservation)."""
+        return None if self.send_counts is None else self.send_counts.T
 
     @property
     def context_width(self) -> int:
@@ -117,6 +140,15 @@ class CommPlan:
         """
         if self.mode == "allgather":
             return jax.lax.all_gather(payload, self.axis, tiled=True)
+        if self.mode == "a2a":
+            if self.a2a_cap == 0:
+                return payload  # no remote deps: context is the local block
+            rank = jax.lax.axis_index(self.axis)
+            idx = jnp.take(jnp.asarray(self.a2a_send_idx), rank, axis=0)
+            send = jnp.take(payload, idx, axis=0)      # (ndev, cap, P)
+            recv = jax.lax.all_to_all(send, self.axis, 0, 0)
+            return jnp.concatenate(
+                [recv.reshape(self.ndev * self.a2a_cap, -1), payload])
         if self.halo == 0:
             return payload
         h, P = self.halo, payload.shape[-1]
@@ -161,7 +193,9 @@ def plan_comm(
 ) -> CommPlan:
     """Build the communication plan for ``graph`` over ``ndev`` ranks.
 
-    ``comm`` forces a mode; ``auto`` picks the cheapest legal one.  With
+    ``comm`` forces a mode; ``auto`` picks the cheapest legal one (never
+    ``a2a``, which must be requested — its per-pair buffers only beat the
+    allgather when the dependence relation is sparse).  With
     ``prefer_ring`` (pipeline backends), graphs whose deps reach only
     toward lower columns use the one-directional ring instead of the
     bidirectional halo.
@@ -195,6 +229,8 @@ def plan_comm(
                 f"{local} columns per rank; use allgather")
 
     mats, iters = _padded_static_inputs(graph, padded)
+    if mode == "a2a":
+        return _plan_a2a(graph, ndev, axis, mats, iters, padded, local)
     if mode == "allgather":
         halo = 0
         lmats = mats  # context is the full gathered (padded) width
@@ -213,3 +249,115 @@ def plan_comm(
         mode=mode, axis=axis, ndev=ndev, width=W, padded_width=padded,
         local=local, halo=halo, local_mats=lmats, iters=iters,
     )
+
+
+def _plan_a2a(graph: TaskGraph, ndev: int, axis: str,
+              mats: np.ndarray, iters: np.ndarray,
+              padded: int, local: int) -> CommPlan:
+    """Per-pair dispatch plan: rank ``src`` sends rank ``dst`` exactly the
+    payload columns ``dst``'s tasks read from ``src``'s block (union over
+    timesteps, one plan reused per step like the halo modes).  Buffers are
+    padded to the max pair count; unused send slots carry an arbitrary
+    local row that no ``local_mats`` entry references.
+    """
+    H = graph.height
+    t_idx, i_idx, j_idx = np.nonzero(mats)
+    src, dst = j_idx // local, i_idx // local
+    remote = src != dst
+    # unique (src, dst, j) triples, lexically sorted — fixes the slot order
+    triples = np.unique(
+        np.stack([src[remote], dst[remote], j_idx[remote]], axis=1), axis=0)
+    send_counts = np.zeros((ndev, ndev), np.int64)
+    for s, d, _ in triples:
+        send_counts[s, d] += 1
+    cap = int(send_counts.max()) if triples.size else 0
+    send_idx = np.zeros((ndev, ndev, cap), np.int32)
+    # context offset of remote column j for its consumer rank:
+    # [recv buffers (ndev * cap, src-major) | local block]
+    col_off = {}
+    slot = np.zeros((ndev, ndev), np.int64)
+    for s, d, j in triples:
+        k = slot[s, d]
+        slot[s, d] += 1
+        send_idx[s, d, k] = j - s * local
+        col_off[(d, j)] = s * cap + k
+    ctx = ndev * cap + local
+    lmats = np.zeros((H, padded, ctx), np.uint8)
+    for t, i, j in zip(t_idx, i_idx, j_idx):
+        r = i // local
+        off = (ndev * cap + (j - r * local)) if j // local == r \
+            else col_off[(r, j)]
+        lmats[t, i, off] = 1
+    return CommPlan(
+        mode="a2a", axis=axis, ndev=ndev, width=graph.width,
+        padded_width=padded, local=local, halo=0, local_mats=lmats,
+        iters=iters, send_counts=send_counts, a2a_cap=cap,
+        a2a_send_idx=send_idx,
+    )
+
+
+# ---------------------------------------------- dynamic token all-to-all
+def dispatch_capacity(sends: int, ndev: int, factor: float) -> int:
+    """Rows per destination-rank buffer for ``sends`` routed items.
+
+    ``factor`` is the MoE capacity factor; the result is padded to a
+    multiple of 8 (TPU sublane) with a floor of 8 so tiny shards still
+    form a legal tile.  Sends beyond a destination's capacity are dropped
+    deterministically in send order (``TokenA2APlan.route``).
+    """
+    return max(8, int(math.ceil(factor * sends / ndev / 8.0) * 8))
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenA2APlan:
+    """Routing-dependent all-to-all over ``axis`` (MoE dispatch/combine).
+
+    The static part — ``cap`` rows per destination, slot assignment by
+    arrival order, forward/reverse ``all_to_all`` — is planned here; the
+    per-row destinations arrive at runtime from the router.  All methods
+    run *inside* ``shard_map``.  Volume per rank per direction:
+    ``ndev * cap`` rows — the quantity the SP-aware MoE cuts by sharding
+    tokens over the ``model`` axis before planning.
+    """
+
+    axis: str
+    ndev: int
+    cap: int
+
+    def route(self, dest):
+        """dest (M,) int32 -> (slot, keep).
+
+        ``slot`` is each row's arrival index among same-destination rows
+        (deterministic in send order — the paper-style capacity drop);
+        rows with ``slot >= cap`` are parked on the overflow slot ``cap``
+        and masked by ``keep``.
+        """
+        onehot = jax.nn.one_hot(dest, self.ndev, dtype=jnp.int32)
+        slot = jnp.cumsum(onehot, axis=0) - onehot
+        slot = (slot * onehot).sum(-1)
+        keep = slot < self.cap
+        return jnp.where(keep, slot, self.cap), keep
+
+    def dispatch(self, dest, slot, rows, fill=0):
+        """Exchange rows (M, ...) toward their destination ranks.
+
+        Returns this rank's received rows, flattened to ``(ndev * cap,
+        ...)``: row ``s * cap + k`` is the k-th row rank ``s`` sent here.
+        Empty/overflow slots hold ``fill``.
+        """
+        shape = (self.ndev, self.cap + 1) + rows.shape[1:]
+        buf = jnp.full(shape, fill, rows.dtype)
+        buf = buf.at[dest, slot].set(rows, mode="drop")[:, : self.cap]
+        recv = jax.lax.all_to_all(buf, self.axis, 0, 0)
+        return recv.reshape((self.ndev * self.cap,) + rows.shape[1:])
+
+    def combine(self, out_rows, dest, slot):
+        """Reverse exchange: out_rows ``(ndev * cap, ...)`` keyed like
+        ``dispatch``'s result travel back to the senders; returns one row
+        per original send (M, ...).  Dropped sends read the overflow slot
+        — mask the result with ``keep`` from ``route``.
+        """
+        back = jax.lax.all_to_all(
+            out_rows.reshape((self.ndev, self.cap) + out_rows.shape[1:]),
+            self.axis, 0, 0)
+        return back[dest, jnp.clip(slot, 0, self.cap - 1)]

@@ -86,6 +86,10 @@ def _tp_fsdp_sp_rules() -> Dict[Optional[str], List[Candidate]]:
         "batch": list(fsdp),
         "seq": list(tp),        # sequence-parallel residual layout
         "seq_full": [],         # replicated sequence inside attention/FFN
+        # MoE region: SP-aware expert parallelism keeps the sequence
+        # sharded over `model` so each plane all-to-alls only its shard
+        # (models.moe ep_mode="sp"; divisibility fallback -> replicated)
+        "seq_moe": list(tp),
         "kv_seq": [],
         "act_heads": list(tp),
         "kv_heads_act": list(tp),

@@ -6,11 +6,38 @@ Two execution paths:
   O(E/k) compute overhead).  Used for tiny smoke configs and as a fallback.
 
 * ``a2a`` — production path: expert parallelism over the ``data`` mesh axis
-  with explicit ``shard_map`` + ``all_to_all`` dispatch/combine, and tensor
-  parallelism over ``model`` inside each expert.  Collectives per layer:
-  dispatch all-to-all, expert-TP psum, combine all-to-all (+ a tiny pmean
-  for the router aux loss).  Pods form independent EP groups (no cross-pod
+  with explicit ``shard_map`` dispatch/combine through
+  ``dist.collectives.TokenA2APlan``, and tensor parallelism over ``model``
+  inside each expert.  Pods form independent EP groups (no cross-pod
   all-to-all: DCN stays out of the token path).
+
+The a2a path runs in one of two expert-parallel modes (``cfg.ep_mode``,
+overridable per call):
+
+``ep_mode="replicated"``
+    Tokens are replicated over ``model`` inside the MoE region; every model
+    plane performs the identical dispatch all-to-all.  Collectives per
+    layer: dispatch a2a (x |model| planes), expert-TP psum, combine a2a
+    (x |model| planes).  Simple, but the dispatch volume is duplicated per
+    model plane.
+
+``ep_mode="sp"``
+    SP-aware expert parallelism: the sequence axis stays sharded over
+    ``model`` inside the MoE region (logical axis ``seq_moe``), so each
+    model plane routes and all-to-alls only its own sequence shard —
+    per-plane a2a volume drops by |model|.  The received token rows are
+    then all-gathered over ``model`` so the f-sliced expert TP psum sums
+    matching rows, each plane slices its own rows back out, and the
+    combine a2a again moves only the plane's shard.  Extra collective: one
+    all-gather of the dispatched rows over ``model``; removed collectives:
+    the seq all-gather into the MoE region and the re-scatter out of it
+    (the residual stream is already sequence-parallel over ``model``).
+    Falls back to ``replicated`` when the sequence length does not divide
+    the ``model`` axis (same divisibility-fallback contract as
+    ``dist.sharding``).  Capacity drops are deterministic per plane, so
+    under pressure the two modes may drop different tokens; with adequate
+    ``moe_capacity_factor`` they agree to reduction-order tolerance (see
+    ``test_moe_sp_matches_replicated``).
 
 Virtual sub-experts: the production mesh fixes |data| = 16; when ``E`` does
 not divide it (Mixtral's 8 experts), each expert is split into
@@ -28,7 +55,7 @@ is deterministic in token order.
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,12 +63,23 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map
+from ..dist import collectives as CC
 from ..dist.sharding import active_rules, constrain
 from .layers import Leaf, _act, _dense_init
+
+EP_MODES = ("replicated", "sp")
 
 
 def _sub_factor(E: int, ndata: int) -> int:
     return math.lcm(E, ndata) // E
+
+
+def virtual_experts(num_experts: int, d_ff: int) -> Tuple[int, int, int]:
+    """The stored expert layout ``(E_v, f_v, sub)`` of ``init_moe``."""
+    sub = _sub_factor(num_experts, 16)
+    if d_ff % sub:
+        sub = 1
+    return num_experts * sub, d_ff // sub, sub
 
 
 def init_moe(key, cfg) -> Dict:
@@ -50,10 +88,7 @@ def init_moe(key, cfg) -> Dict:
     ks = jax.random.split(key, 4)
     # store at the finest virtualization the production mesh needs (16);
     # the layout is transparent to smaller meshes (expert dim just divides).
-    sub = _sub_factor(E, 16)
-    if f % sub:
-        sub = 1
-    E_v, f_v = E * sub, f // sub
+    E_v, f_v, _ = virtual_experts(E, f)
     return {
         "router": Leaf(_dense_init(ks[0], (d, E), d, jnp.float32), (None, None)),
         "w_gate": Leaf(_dense_init(ks[1], (E_v, d, f_v), d, dt),
@@ -102,8 +137,13 @@ def _ffn(blocks, wg, wu, wd, act: str):
                       preferred_element_type=jnp.float32).astype(blocks.dtype)
 
 
-def apply_moe(p: Dict, x, cfg, impl: str = "auto") -> Tuple[jax.Array, Dict]:
-    """x: (B, S, d) -> (y, metrics)."""
+def apply_moe(p: Dict, x, cfg, impl: str = "auto",
+              ep_mode: Optional[str] = None) -> Tuple[jax.Array, Dict]:
+    """x: (B, S, d) -> (y, metrics).
+
+    ``ep_mode`` overrides ``cfg.ep_mode`` for the a2a path (see module
+    docstring); ``None`` reads the config.
+    """
     rules = active_rules()
     if impl == "auto":
         use_a2a = (
@@ -115,7 +155,11 @@ def apply_moe(p: Dict, x, cfg, impl: str = "auto") -> Tuple[jax.Array, Dict]:
         )
         impl = "a2a" if use_a2a else "dense"
     if impl == "a2a":
-        return _moe_a2a(p, x, cfg, rules)
+        mode = ep_mode or getattr(cfg, "ep_mode", "replicated")
+        if mode not in EP_MODES:
+            raise ValueError(
+                f"unknown ep_mode {mode!r}; known: {EP_MODES}")
+        return _moe_a2a(p, x, cfg, rules, mode)
     return _moe_dense(p, x, cfg)
 
 
@@ -152,10 +196,18 @@ def _local_dim(mesh, spec_entry) -> int:
     return int(np.prod([mesh.shape[a] for a in axes]))
 
 
-def _moe_a2a(p: Dict, x, cfg, rules) -> Tuple[jax.Array, Dict]:
+def _spec_uses(spec_entry, axis: str) -> bool:
+    if spec_entry is None:
+        return False
+    axes = (spec_entry,) if isinstance(spec_entry, str) else spec_entry
+    return axis in axes
+
+
+def _moe_a2a(p: Dict, x, cfg, rules, ep_mode: str) -> Tuple[jax.Array, Dict]:
     mesh = rules.mesh
     all_axes = tuple(mesh.shape.keys())
     ndata = mesh.shape["data"]
+    nmodel = mesh.shape["model"]
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.num_experts_per_tok
     E_v, _, f_v = p["w_gate"].shape
@@ -163,26 +215,35 @@ def _moe_a2a(p: Dict, x, cfg, rules) -> Tuple[jax.Array, Dict]:
     E_loc = E_v // ndata  # virtual experts per data-rank
     factor = cfg.moe_capacity_factor
 
-    # Tokens must be REPLICATED over `model` inside the MoE region: the
-    # expert-TP psum sums f-slice partials across model ranks, which is
-    # only valid when every model rank holds the SAME rows.  (Caught by
-    # test_moe_a2a_matches_dense: with seq sharded over model, the psum
-    # mixed different tokens' partials.)  Cost: the dispatch all-to-all is
-    # duplicated per model plane; an SP-aware EP that partitions dispatch
-    # across planes and all-gathers expert outputs is noted as future work.
-    x = constrain(x, "batch", "seq_full", None)
-    x_spec = rules.spec_for(("batch", "seq_full", None), x.shape)
+    # Token layout inside the MoE region.  replicated: tokens REPLICATED
+    # over `model` (the expert-TP psum sums f-slice partials across model
+    # ranks, which needs every model rank to hold the SAME rows — with seq
+    # sharded and no gather, the psum would mix different tokens' partials,
+    # caught by test_moe_a2a_matches_dense).  sp: seq stays sharded over
+    # `model` (logical axis "seq_moe") and the rows are all-gathered over
+    # `model` AFTER dispatch, so each plane's a2a moves 1/|model| of the
+    # volume.  Divisibility fallback: if S doesn't shard over model the
+    # sp request degrades to replicated.
+    seq_axis = "seq_moe" if ep_mode == "sp" else "seq_full"
+    x_spec = rules.spec_for(("batch", seq_axis, None), x.shape)
+    sp = ep_mode == "sp" and _spec_uses(x_spec[1], "model")
+    if not sp:
+        seq_axis = "seq_full"
+        x_spec = rules.spec_for(("batch", seq_axis, None), x.shape)
+    x = constrain(x, "batch", seq_axis, None)
     b_loc = B // _local_dim(mesh, x_spec[0])
     s_loc = S // _local_dim(mesh, x_spec[1])
     n_loc = b_loc * s_loc
     sends = n_loc * k * sub
-    cap = max(8, int(math.ceil(factor * sends / ndata / 8.0) * 8))
+    cap = CC.dispatch_capacity(sends, ndata, factor)
+    plan = CC.TokenA2APlan(axis="data", ndev=ndata, cap=cap)
 
     def moe_local(xb, wr_l, wg_l, wu_l, wd_l):
         x2 = xb.reshape(n_loc, d)
         gates, top_idx, pieces = _router(x2, wr_l, E, k)
         # exact global losses: psum the sufficient statistics, then form
-        # (tokens are duplicated over `model`; ratios cancel the overcount)
+        # (replicated mode double-counts tokens over `model`; the ratios
+        # cancel the overcount.  sp mode sums each token once.)
         pieces = jax.lax.psum(pieces, all_axes)
         lb, z = _form_losses(pieces, E, k)
 
@@ -194,24 +255,18 @@ def _moe_a2a(p: Dict, x, cfg, rules) -> Tuple[jax.Array, Dict]:
 
         dest = ev // E_loc          # destination data-rank
         ev_local = ev % E_loc       # expert index on that rank
-        onehot_dest = jax.nn.one_hot(dest, ndata, dtype=jnp.int32)  # (M, ndata)
-        slot = jnp.cumsum(onehot_dest, axis=0) - onehot_dest
-        slot = (slot * onehot_dest).sum(-1)       # (M,) rank among same-dest
-        keep = slot < cap
-        slot_c = jnp.where(keep, slot, cap)       # drop row = cap
-
-        send_x = jnp.zeros((ndata, cap + 1, d), xb.dtype)
-        send_x = send_x.at[dest, slot_c].set(x2[tok], mode="drop")
-        send_e = jnp.full((ndata, cap + 1), -1, jnp.int32)
-        send_e = send_e.at[dest, slot_c].set(ev_local, mode="drop")
-        send_x, send_e = send_x[:, :cap], send_e[:, :cap]
+        slot, keep = plan.route(dest)
 
         # dispatch all-to-all over the data axis (within-pod EP groups)
-        recv_x = jax.lax.all_to_all(send_x, "data", 0, 0)  # (ndata, cap, d)
-        recv_e = jax.lax.all_to_all(send_e, "data", 0, 0)
-        R = ndata * cap
-        rx = recv_x.reshape(R, d)
-        re = recv_e.reshape(R)
+        rx = plan.dispatch(dest, slot, x2[tok])            # (ndata*cap, d)
+        re = plan.dispatch(dest, slot, ev_local, fill=-1)  # (ndata*cap,)
+        if sp:
+            # each plane dispatched only its own sequence shard; gather the
+            # planes' rows so the f-sliced expert-TP psum below sums
+            # partials of the SAME rows on every model rank
+            rx = jax.lax.all_gather(rx, "model").reshape(-1, d)
+            re = jax.lax.all_gather(re, "model").reshape(-1)
+        R = re.shape[0]
         valid = re >= 0
 
         if E_loc == 1:
@@ -233,9 +288,15 @@ def _moe_a2a(p: Dict, x, cfg, rules) -> Tuple[jax.Array, Dict]:
             out_rows = part[e_safe, jnp.clip(pos_c, 0, cap_e - 1)]
             out_rows = out_rows * ok[:, None].astype(out_rows.dtype)
 
+        if sp:
+            # every plane now holds full outputs for ALL planes' rows;
+            # slice this plane's own dispatched rows back out
+            out_rows = jnp.take(
+                out_rows.reshape(nmodel, ndata * cap, d),
+                jax.lax.axis_index("model"), axis=0)
+
         # combine all-to-all (reverse direction)
-        back = jax.lax.all_to_all(out_rows.reshape(ndata, cap, d), "data", 0, 0)
-        got = back[dest, jnp.clip(slot_c, 0, cap - 1)]  # (M, d)
+        got = plan.combine(out_rows, dest, slot)  # (M, d)
         got = (got.astype(jnp.float32)
                * keep[:, None].astype(jnp.float32)
                * gts[:, None])

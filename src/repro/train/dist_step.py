@@ -16,8 +16,9 @@ bounded by ``0.5 * scale`` per rank (see ``dist.compression``).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 from jax.sharding import PartitionSpec as P
@@ -61,13 +62,18 @@ def dp_train_step(state: TS.TrainState, batch: Dict, cfg,
 
 
 def jit_dp_train_step(cfg, tcfg: TS.TrainConfig, mesh,
-                      axis: str = BATCH_AXIS, compress: bool = True):
+                      axis: str = BATCH_AXIS, compress: bool = True,
+                      ep_mode: Optional[str] = None):
     """Compile-ready shard_map'd step: state replicated, batch split.
 
     Drop-in for ``train_step.jit_train_step`` — same ``(state, batch) ->
     (state, metrics)`` signature, so the trainer swaps it in behind a
-    flag.
+    flag.  ``ep_mode`` overrides the config's MoE expert-parallel dispatch
+    mode ("replicated" | "sp") for MoE archs; ``None`` keeps
+    ``cfg.ep_mode``.
     """
+    if ep_mode is not None:
+        cfg = dataclasses.replace(cfg, ep_mode=ep_mode)
     step = functools.partial(dp_train_step, cfg=cfg, tcfg=tcfg, axis=axis,
                              compress=compress)
     shmapped = shard_map(

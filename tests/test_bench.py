@@ -220,6 +220,83 @@ def test_artifact_schema_roundtrip(tmp_path):
     assert max(effs) == pytest.approx(1.0)
 
 
+def test_artifact_validation_names_the_offending_key():
+    """Every negative path raises with a message naming what broke:
+    wrong-typed fields, missing keys, unknown schema version."""
+    doc = bench_artifact(_tiny_result())
+    validate_artifact(doc)
+
+    def breaks(message, **changes):
+        with pytest.raises(ValueError, match=message):
+            validate_artifact({**doc, **changes})
+
+    # unknown schema version / kind
+    breaks("schema must be 1", schema=2)
+    breaks("schema must be 1", schema="1")
+    breaks("unknown kind", kind="not_a_sweep")
+    # wrong-typed top-level fields
+    breaks("timer must be a non-empty string", timer=7)
+    breaks("timer_config", timer_config=[])
+    breaks("threshold", threshold="0.5")
+    breaks("peak_rate", peak_rate=None)
+    breaks("metg_s", metg_s="fast")
+    # missing keys
+    for key in ("schema", "kind", "timer", "scenario", "points"):
+        stripped = {k: v for k, v in doc.items() if k != key}
+        with pytest.raises(ValueError):
+            validate_artifact(stripped)
+    with pytest.raises(ValueError, match="metg_s"):
+        validate_artifact({k: v for k, v in doc.items() if k != "metg_s"})
+    # scenario / point fields: wrong type and missing, each named
+    bad = json.loads(json.dumps(doc))
+    bad["scenario"]["width"] = "8"
+    with pytest.raises(ValueError, match="scenario.width"):
+        validate_artifact(bad)
+    bad = json.loads(json.dumps(doc))
+    del bad["scenario"]["backend"]
+    with pytest.raises(ValueError, match="scenario.backend"):
+        validate_artifact(bad)
+    bad = json.loads(json.dumps(doc))
+    bad["scenario"]["name"] = ""
+    with pytest.raises(ValueError, match="scenario.name"):
+        validate_artifact(bad)
+    bad = json.loads(json.dumps(doc))
+    bad["points"][1]["rate"] = []
+    with pytest.raises(ValueError, match=r"points\[1\].rate"):
+        validate_artifact(bad)
+    bad = json.loads(json.dumps(doc))
+    del bad["points"][0]["num_tasks"]
+    with pytest.raises(ValueError, match=r"points\[0\].num_tasks"):
+        validate_artifact(bad)
+
+
+def test_read_bench_json_rejects_truncated_and_garbage(tmp_path):
+    """Corrupt files fail as ValueError naming the path — the same
+    exception type as schema violations, so the compare gate and CI catch
+    both identically."""
+    path = write_bench_json(_tiny_result(), str(tmp_path))
+    read_bench_json(path)  # sanity: intact file round-trips
+    # truncated mid-document
+    text = open(path).read()
+    trunc = os.path.join(tmp_path, "BENCH_trunc.json")
+    with open(trunc, "w") as f:
+        f.write(text[: len(text) // 2])
+    with pytest.raises(ValueError, match="not valid JSON"):
+        read_bench_json(trunc)
+    # outright garbage
+    garbage = os.path.join(tmp_path, "BENCH_garbage.json")
+    with open(garbage, "w") as f:
+        f.write("\x00\x01not json at all{{{")
+    with pytest.raises(ValueError, match="not valid JSON"):
+        read_bench_json(garbage)
+    # valid JSON, wrong shape (schema layer takes over)
+    shapeless = os.path.join(tmp_path, "BENCH_shapeless.json")
+    with open(shapeless, "w") as f:
+        json.dump(["not", "an", "object"], f)
+    with pytest.raises(ValueError, match="not an object"):
+        read_bench_json(shapeless)
+
+
 def test_artifact_validation_rejects_corruption():
     doc = bench_artifact(_tiny_result())
     validate_artifact(doc)
@@ -251,6 +328,218 @@ def test_artifact_validation_rejects_corruption():
     ok = json.loads(json.dumps(doc))
     ok["metg_s"] = None  # no crossing is a valid result
     validate_artifact(ok)
+
+
+# ------------------------------------------------ bench-regression compare
+def _doc(scale=1.0, name="artifact/check v1"):
+    doc = bench_artifact(_tiny_result())
+    doc = json.loads(json.dumps(doc))  # deep copy
+    doc["scenario"]["name"] = name
+    for p in doc["points"]:
+        p["wall_time_s"] *= scale
+    if doc["metg_s"] is not None:
+        doc["metg_s"] *= scale
+    return doc
+
+
+def test_compare_identical_artifacts_pass():
+    from repro.bench import compare_artifacts
+
+    res = compare_artifacts(_doc(), _doc(), rel_threshold=0.01)
+    assert res.ok
+    assert res.metg_rel_delta == pytest.approx(0.0)
+    assert res.points and all(p.rel_delta == pytest.approx(0.0)
+                              for p in res.points)
+
+
+def test_compare_flags_metg_and_point_regressions():
+    from repro.bench import compare_artifacts
+
+    res = compare_artifacts(_doc(), _doc(scale=2.0), rel_threshold=0.25)
+    assert not res.ok
+    assert any("METG" in r for r in res.regressions)
+    assert any("point iterations=" in r for r in res.regressions)
+    # a 2x speedup is never a regression
+    assert compare_artifacts(_doc(), _doc(scale=0.5),
+                             rel_threshold=0.25).ok
+    # within threshold passes
+    assert compare_artifacts(_doc(), _doc(scale=1.1),
+                             rel_threshold=0.25).ok
+
+
+def test_compare_metg_lost_crossing_regresses():
+    from repro.bench import compare_artifacts
+
+    cur = _doc()
+    cur["metg_s"] = None
+    res = compare_artifacts(_doc(), cur, rel_threshold=0.25)
+    assert any("no longer crosses" in r for r in res.regressions)
+    # baseline never crossed: nothing to gate on
+    base = _doc()
+    base["metg_s"] = None
+    assert compare_artifacts(base, _doc(), rel_threshold=0.25).ok
+
+
+def test_compare_rejects_identity_mismatch_and_missing_points():
+    from repro.bench import compare_artifacts
+
+    other = _doc(name="something else")
+    res = compare_artifacts(_doc(), other, rel_threshold=0.25)
+    assert any("scenario.name changed" in r for r in res.regressions)
+    cur = _doc()
+    cur["points"] = cur["points"][:-1]
+    res = compare_artifacts(_doc(), cur, rel_threshold=0.25)
+    assert any("missing" in r for r in res.regressions)
+    with pytest.raises(ValueError, match="rel_threshold"):
+        compare_artifacts(_doc(), _doc(), rel_threshold=0.0)
+    # wall-clock vs fake-clock times are not comparable: refuse, even
+    # when the numbers would happen to sit inside the threshold
+    cur = _doc()
+    cur["timer"] = "wallclock"
+    res = compare_artifacts(_doc(), cur, rel_threshold=0.25)
+    assert any("timer changed" in r for r in res.regressions)
+
+
+def test_compare_dirs_and_run_baseline_gate(tmp_path):
+    """End-to-end --baseline contract: identical dirs pass, a slowed
+    scenario or a vanished artifact fails, a new artifact is ignored."""
+    from benchmarks.run import main
+    from repro.bench import compare_dirs
+
+    base_dir, cur_dir = tmp_path / "base", tmp_path / "cur"
+    spec = ScenarioSpec(name="gate.check", pattern="trivial", width=4,
+                        height=8,
+                        sweep=SweepControls(iterations_hi=64, n_points=3))
+    res = run_scenario(spec, timer=SyntheticTimer())
+    write_bench_json(res, str(base_dir))
+    write_bench_json(res, str(cur_dir))
+    results = compare_dirs(str(base_dir), str(cur_dir))
+    assert len(results) == 1 and results[0].ok
+    # new-in-current artifacts don't need a baseline
+    res2 = run_scenario(
+        spec := ScenarioSpec(name="gate.new", pattern="trivial", width=4,
+                             height=8), timer=SyntheticTimer())
+    write_bench_json(res2, str(cur_dir))
+    assert all(r.ok for r in compare_dirs(str(base_dir), str(cur_dir)))
+    # the CLI gate: same sweep vs itself passes...
+    art = tmp_path / "cli"
+    main(["--smoke", "--timer", "synthetic", "--only", "bench_scaling",
+          "--artifacts", str(art)])
+    main(["--smoke", "--timer", "synthetic", "--only", "bench_scaling",
+          "--artifacts", str(tmp_path / "cli2"),
+          "--baseline", str(art)])
+    # ...and exits nonzero when a baseline artifact of a family this run
+    # measured has no counterpart (a scenario vanished from the module)
+    (tmp_path / "cli2" / os.listdir(art)[0]).rename(
+        tmp_path / "cli2" / "BENCH_scaling.renamed-away.json")
+    with pytest.raises(SystemExit) as exc:
+        main(["--smoke", "--timer", "synthetic", "--only", "bench_scaling",
+              "--artifacts", str(tmp_path / "cli3"),
+              "--baseline", str(tmp_path / "cli2")])
+    assert exc.value.code == 1
+    # a partial run is NOT failed by baselines of families it never
+    # remeasured (e.g. --only bench_scaling vs the full committed
+    # snapshot) — "missing" there means "not run", not "vanished"
+    (tmp_path / "cli2" / "BENCH_scaling.renamed-away.json").rename(
+        tmp_path / "cli2" / "BENCH_otherfamily.cell.json")
+    main(["--smoke", "--timer", "synthetic", "--only", "bench_scaling",
+          "--artifacts", str(tmp_path / "cli4"),
+          "--baseline", str(tmp_path / "cli2")])
+
+
+def test_compare_dirs_family_scoping(tmp_path):
+    from repro.bench import compare_dirs, scenario_family
+
+    assert scenario_family("BENCH_metg.xla-scan.nearest.json") == "metg"
+    assert scenario_family("/x/BENCH_metg_deps.csp.radix3.json") == "metg_deps"
+    base_dir, cur_dir = tmp_path / "base", tmp_path / "cur"
+    for name in ("gate.a", "gate.b", "other.c"):
+        res = run_scenario(
+            ScenarioSpec(name=name, pattern="trivial", width=4, height=8),
+            timer=SyntheticTimer())
+        write_bench_json(res, str(base_dir))
+        if name != "other.c":
+            write_bench_json(res, str(cur_dir))
+    # unscoped: other.c vanished -> regression
+    assert not all(r.ok for r in compare_dirs(str(base_dir), str(cur_dir)))
+    # scoped to the family that ran: other.* skipped, gate.* compared
+    scoped = compare_dirs(str(base_dir), str(cur_dir), families={"gate"})
+    assert len(scoped) == 2 and all(r.ok for r in scoped)
+    # a gate.* scenario vanishing is still caught inside the scope
+    os.remove(os.path.join(str(cur_dir), "BENCH_gate.b.json"))
+    scoped = compare_dirs(str(base_dir), str(cur_dir), families={"gate"})
+    assert any(not r.ok for r in scoped)
+
+
+def test_committed_baselines_are_valid_artifacts():
+    """The benchmarks/baselines/ snapshot the CI gate diffs against must
+    itself read back clean (schema drift breaks here, not in CI)."""
+    from repro.bench.compare import bench_json_names
+
+    basedir = os.path.join(os.path.dirname(__file__), "..",
+                           "benchmarks", "baselines")
+    names = bench_json_names(basedir)
+    assert len(names) >= 10, "baseline snapshot missing or too small"
+    for f in names:
+        doc = read_bench_json(os.path.join(basedir, f))
+        assert doc["timer"] == "synthetic", (
+            f"{f}: baselines must use the deterministic fake clock")
+
+
+# --------------------------------------------------- moe_dispatch scenario
+def test_moe_dispatch_sp_cuts_a2a_volume_by_model_axis():
+    """The tentpole's measurable claim, asserted (not just printed): the
+    SP-aware EP scenario's per-plane a2a bytes are exactly 1/|model| of
+    the replicated scenario's, for more than one mesh shape.  (The same
+    numbers are re-verified against compiled HLO on an 8-rank mesh in
+    test_distributed.py.)"""
+    from repro.bench import MoEDispatchSpec, analytic_a2a_bytes
+
+    for data, model in ((4, 2), (2, 4), (8, 2)):
+        rep = analytic_a2a_bytes(MoEDispatchSpec(
+            data=data, model=model, ep_mode="replicated"))
+        sp = analytic_a2a_bytes(MoEDispatchSpec(
+            data=data, model=model, ep_mode="sp"))
+        assert rep["a2a_bytes"] == sp["a2a_bytes"] * model, (data, model)
+        assert rep["dispatch_planes"] == model
+        assert sp["dispatch_planes"] == 1
+        # total over planes: sp moves the replicated single-plane volume
+        assert sp["a2a_bytes_all_planes"] == rep["a2a_bytes"]
+        assert sp["sp_effective"] == 1.0 and rep["sp_effective"] == 0.0
+
+
+def test_moe_dispatch_analytic_models_divisibility_fallback():
+    """An sp spec whose sequence does not divide `model` runs replicated
+    in the kernel (models.moe divisibility fallback) — the analytic model
+    must report the replicated volume, not a phantom SP reduction."""
+    from repro.bench import MoEDispatchSpec, analytic_a2a_bytes
+
+    sp = analytic_a2a_bytes(MoEDispatchSpec(seq=30, model=4, data=2,
+                                            ep_mode="sp"))
+    rep = analytic_a2a_bytes(MoEDispatchSpec(seq=30, model=4, data=2,
+                                             ep_mode="replicated"))
+    assert sp["sp_effective"] == 0.0
+    assert sp["a2a_bytes"] == rep["a2a_bytes"]
+    assert sp["dispatch_planes"] == rep["dispatch_planes"] == 4
+
+
+def test_moe_dispatch_report_roofline_terms():
+    from repro.bench import MoEDispatchSpec, moe_dispatch_report
+    from repro.launch.roofline import LINK_BW
+
+    rep = moe_dispatch_report(MoEDispatchSpec())
+    assert rep["a2a_roofline_s"] == pytest.approx(rep["a2a_bytes"] / LINK_BW)
+    assert "hlo_a2a_bytes" not in rep  # compiled path not requested
+
+
+def test_bench_moe_dispatch_module_reports_reduction():
+    from benchmarks.bench_moe_dispatch import run as run_moe
+    from benchmarks.common import BenchContext
+
+    rows = run_moe(BenchContext(smoke=True))
+    byname = {r.name: r for r in rows}
+    red = byname["moe_dispatch.d4m2.reduction"]
+    assert "a2a_ratio=2.00" in red.derived
 
 
 # ------------------------------------------------- benchmarks CLI contract

@@ -111,6 +111,153 @@ def test_time_varying_pattern_analyzed_fully():
     assert CC.dependency_reach(g) == 8  # stride at the deepest level
 
 
+# ------------------------------------------------------------- a2a mode
+def _brute_force_pair_counts(g, ndev, local):
+    """[src, dst] distinct remote columns needed, straight from g.deps."""
+    need = set()
+    for t in range(1, g.height):
+        for i in range(g.width):
+            for j in g.deps(t, i):
+                if j // local != i // local:
+                    need.add((j // local, i // local, j))
+    counts = np.zeros((ndev, ndev), np.int64)
+    for s, d, _ in need:
+        counts[s, d] += 1
+    return counts
+
+
+@pytest.mark.parametrize("pattern,kw", [
+    ("stencil", {}), ("sweep", {}), ("fft", {}),
+    ("spread", {"radix": 3}), ("random", {}),
+])
+def test_a2a_plan_counts_match_deps(pattern, kw):
+    g = make_graph(width=12, height=6, pattern=pattern, iterations=1, **kw)
+    plan = CC.plan_comm(g, 4, "cols", comm="a2a")
+    assert plan.mode == "a2a"
+    want = _brute_force_pair_counts(g, 4, plan.local)
+    np.testing.assert_array_equal(plan.send_counts, want)
+    # permutation: every row sent is received exactly once
+    np.testing.assert_array_equal(plan.recv_counts, plan.send_counts.T)
+    assert plan.send_counts.sum() == plan.recv_counts.sum()
+    assert (np.diag(plan.send_counts) == 0).all()  # local rows never move
+    assert plan.a2a_cap == plan.send_counts.max()
+
+
+def test_a2a_local_matrices_reindex_correctly():
+    """Every dep lands at its [recv buffers | local block] context offset:
+    remote j from rank s at slot k -> s*cap + k (slots in sorted column
+    order per pair), local j -> ndev*cap + (j - r*local)."""
+    g = make_graph(width=12, height=6, pattern="stencil", iterations=1)
+    plan = CC.plan_comm(g, 4, "cols", comm="a2a")
+    ndev, cap, local = plan.ndev, plan.a2a_cap, plan.local
+    for t in range(g.height):
+        want = np.zeros((plan.padded_width, plan.context_width), np.uint8)
+        for i in range(g.width):
+            r = i // local
+            for j in g.deps(t, i):
+                s = j // local
+                if s == r:
+                    want[i, ndev * cap + (j - r * local)] = 1
+                else:
+                    cols = sorted({jj for tt in range(1, g.height)
+                                   for ii in range(g.width)
+                                   if ii // local == r
+                                   for jj in g.deps(tt, ii)
+                                   if jj // local == s})
+                    want[i, s * cap + cols.index(j)] = 1
+        np.testing.assert_array_equal(plan.local_mats[t], want)
+
+
+def test_a2a_mode_must_be_requested_and_handles_degenerates():
+    g = make_graph(width=8, height=6, pattern="fft")
+    assert CC.plan_comm(g, 4, "cols").mode == "allgather"  # auto never a2a
+    plan = CC.plan_comm(g, 4, "cols", comm="a2a")
+    assert plan.mode == "a2a" and plan.halo == 0
+    # single rank: nothing remote, empty buffers, context == local block
+    p1 = CC.plan_comm(g, 1, "cols", comm="a2a")
+    assert p1.a2a_cap == 0 and p1.send_counts.sum() == 0
+    assert p1.context_width == p1.local
+    # no-comm graph: counts all zero on any rank count
+    triv = CC.plan_comm(make_graph(width=8, height=6, pattern="trivial"),
+                        4, "cols", comm="a2a")
+    assert triv.send_counts.sum() == 0 and triv.a2a_cap == 0
+    # ragged: dead padding columns neither send nor receive
+    gr = make_graph(width=10, height=8, pattern="stencil", iterations=4)
+    pr = CC.plan_comm(gr, 4, "cols", comm="a2a")
+    assert pr.ragged and (pr.local_mats[:, 10:] == 0).all()
+
+
+def test_a2a_forced_execution_matches_oracle():
+    """The a2a exchange path through the CSP backend (1 device here; the
+    8-rank version lives in test_distributed.py)."""
+    from repro.backends import get_backend
+    from repro.core import check_outputs
+
+    for pat, kw in [("stencil", {}), ("spread", {"radix": 3}), ("fft", {})]:
+        g = make_graph(width=6, height=8, pattern=pat, iterations=3, **kw)
+        be = get_backend("shardmap-csp", comm="a2a")
+        assert be.plan(g).mode == "a2a"
+        check_outputs(g, be.run([g])[0])
+
+
+# -------------------------------------------------- token dispatch plan
+def test_dispatch_capacity_math():
+    assert CC.dispatch_capacity(512, 4, 8.0) == 1024
+    assert CC.dispatch_capacity(1, 8, 1.0) == 8      # floor
+    assert CC.dispatch_capacity(100, 4, 1.0) == 32   # ceil to multiple of 8
+    # SP-aware EP: sends cut by |model| cuts capacity proportionally
+    assert CC.dispatch_capacity(512 // 2, 4, 8.0) == 512
+
+
+def test_token_a2a_roundtrip_single_rank():
+    """dispatch -> combine is the identity for kept rows (ndev=1 runs the
+    full slotting/capacity path without a mesh)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    plan = CC.TokenA2APlan(axis="d", ndev=1, cap=8)
+    rows = jnp.arange(12, dtype=jnp.float32).reshape(6, 2)
+    dest = jnp.zeros(6, jnp.int32)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("d",))
+
+    def f(r):
+        slot, keep = plan.route(dest)
+        recv = plan.dispatch(dest, slot, r)
+        assert recv.shape == (8, 2)
+        back = plan.combine(recv, dest, slot)
+        return back * keep[:, None], keep
+
+    got, keep = shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                          check_vma=False)(rows)
+    assert np.asarray(keep).all()  # cap 8 >= 6 rows: nothing dropped
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(rows))
+
+
+def test_token_a2a_capacity_drop_is_deterministic():
+    """Rows beyond cap are dropped in send order (paper-style capacity)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    plan = CC.TokenA2APlan(axis="d", ndev=1, cap=8)
+    rows = jnp.arange(20, dtype=jnp.float32)[:, None]
+    dest = jnp.zeros(20, jnp.int32)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("d",))
+
+    def f(r):
+        slot, keep = plan.route(dest)
+        return keep
+
+    keep = np.asarray(shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                                check_vma=False)(rows))
+    assert keep[:8].all() and not keep[8:].any()
+
+
 # ------------------------------------------------- production mesh spec
 def test_production_mesh_spec_grows_stage_axis():
     assert production_mesh_spec() == ((16, 16), ("data", "model"))

@@ -14,6 +14,10 @@ from repro.backends import backend_names, get_backend
 from repro.core import (check_outputs, execute_reference, make_graph,
                         pattern_names, replicate)
 
+# the SPMD backends also accept a forced comm mode; "a2a" (the
+# MPI_Alltoallv analogue added for MoE dispatch planning) joins the
+# conformance matrix through test_forced_a2a_conformance below
+
 PATTERN_KW = {"nearest": {"radix": 3}, "spread": {"radix": 3}}
 
 
@@ -45,6 +49,16 @@ def test_backend_pattern_conformance(backend, pattern, oracle):
     check_outputs(g, out, expected=oracle(g))
 
 
+@pytest.mark.parametrize("pattern", pattern_names())
+def test_forced_a2a_conformance(pattern, oracle):
+    """Every pattern through the CSP backend with the per-pair a2a
+    exchange forced (the static CommPlan mode backing MoE dispatch)."""
+    g = conformance_graph(pattern)
+    be = get_backend("shardmap-csp", comm="a2a")
+    assert be.plan(g).mode == "a2a"
+    check_outputs(g, be.run([g])[0], expected=oracle(g))
+
+
 def test_pipeline_backend_registered():
     assert "shardmap-pipeline" in backend_names()
     be = get_backend("shardmap-pipeline")
@@ -73,6 +87,46 @@ def test_run_many_matches_single_graph(backend, ngraphs, oracle):
             check_outputs(g, out, expected=oracle(g))
             assert (np.asarray(out)[:, :4] == alone[:, :4]).all(), (
                 backend, pattern, ngraphs)
+
+
+@pytest.mark.parametrize("backend", backend_names())
+def test_run_many_single_graph_degenerate_stack(backend, oracle):
+    """ngraphs=1 through ``run_many`` — the degenerate stack.  The stacked
+    (graph-dim) programs, interleaved wavefronts, and combined shard_map
+    scan must all collapse correctly to one graph, bit-exact vs ``run``."""
+    be = get_backend(backend)
+    for pattern in MULTI_GRAPH_PATTERNS:
+        g = conformance_graph(pattern)
+        alone = np.asarray(be.run([g])[0])
+        outs = be.run_many(replicate(g, 1))
+        assert len(outs) == 1
+        check_outputs(g, outs[0], expected=oracle(g))
+        assert (np.asarray(outs[0])[:, :4] == alone[:, :4]).all(), (
+            backend, pattern)
+
+
+def imbalanced_graph(pattern="stencil"):
+    # imbalance scales each task's iteration count by U[1-imb, 1],
+    # deterministic in (t, i, seed) — the per-task work is heterogeneous
+    return make_graph(width=6, height=8, pattern=pattern, iterations=6,
+                      imbalance=0.7, **PATTERN_KW.get(pattern, {}))
+
+
+def test_host_dynamic_run_many_imbalanced_kernel():
+    """The host backend's interleaved wavefronts under an imbalanced
+    kernel: per-task durations differ, so the dispatch interleaving must
+    not mix up which iteration count belongs to which task — bit-exact vs
+    the single-graph run and the oracle."""
+    be = get_backend("host-dynamic")
+    g = imbalanced_graph()
+    expected = execute_reference(g)
+    alone = np.asarray(be.run([g])[0])
+    check_outputs(g, alone, expected=expected)
+    outs = be.run_many(replicate(g, 3))
+    assert len(outs) == 3
+    for out in outs:
+        check_outputs(g, out, expected=expected)
+        assert (np.asarray(out)[:, :4] == alone[:, :4]).all()
 
 
 @pytest.mark.parametrize("backend", backend_names())

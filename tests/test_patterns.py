@@ -99,6 +99,44 @@ def test_max_radix_is_true_upper_bound(width, height):
         assert radix == observed, (pattern, radix, observed)
 
 
+@settings(max_examples=40, deadline=None)
+@given(
+    width=st.integers(1, 16),
+    ndev=st.sampled_from([1, 2, 4, 8]),
+    height=st.integers(2, 8),
+)
+def test_a2a_plan_counts_are_a_permutation(width, ndev, height):
+    """Token conservation for the a2a CommPlan mode, every registered
+    pattern: the [src, dst] send-count matrix and the recv-count matrix
+    are transposes (each row sent is received exactly once), counts match
+    an independent recount from ``deps``, and nothing rides the diagonal.
+    Ragged widths (width % ndev != 0, width < ndev) arise naturally."""
+    from repro.dist import collectives as CC
+
+    for pattern in PATTERNS:
+        g = make_graph(width=width, height=height, pattern=pattern,
+                       **_params_for(pattern))
+        plan = CC.plan_comm(g, ndev, "cols", comm="a2a")
+        sc, rc = plan.send_counts, plan.recv_counts
+        assert sc.shape == rc.shape == (ndev, ndev), pattern
+        assert (sc >= 0).all(), pattern
+        assert (rc == sc.T).all(), pattern                # permutation
+        assert sc.sum() == rc.sum(), pattern              # conservation
+        assert (np.diag(sc) == 0).all(), pattern          # local rows stay
+        # independent recount straight from the set-form dependence relation
+        want = np.zeros((ndev, ndev), np.int64)
+        seen = set()
+        for t in range(1, height):
+            for i in range(width):
+                for j in g.deps(t, i):
+                    s, d = j // plan.local, i // plan.local
+                    if s != d and (s, d, j) not in seen:
+                        seen.add((s, d, j))
+                        want[s, d] += 1
+        assert (sc == want).all(), (pattern, width, ndev)
+        assert plan.a2a_cap == int(sc.max()), (pattern, width, ndev)
+
+
 def test_pattern_shapes_match_paper_table2():
     """Spot-check the Table 2 relations."""
     g = make_graph(width=8, height=8, pattern="stencil")
