@@ -1,0 +1,54 @@
+"""Study: communication hiding vs payload bytes (paper §V-F, Fig. 11/12).
+
+Payload-bytes sweep at fixed task granularity for the SPMD backends with
+``comm_overlap`` off (blocking, strict MPI-style compute/communicate
+alternation) and on (double-buffered: the next timestep's exchange is
+issued ahead of the kernel body).  Derived metric: overlap efficiency =
+ideal / observed elapsed, normalized per variant against its smallest-
+payload cell — see ``repro.bench.studies``.
+
+On the synthetic timer the communication term is deterministic
+(``ndeps * bytes * SECONDS_PER_BYTE``) and an overlapping backend pays
+``max(compute, comm)`` instead of the sum, so the committed baselines
+show ``overlap <= blocking`` elapsed at every payload — the acceptance
+claim ``tests/test_bench.py`` asserts.  Thin wrapper over
+``repro.bench.studies``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.bench.studies import (PAYLOAD_BYTES, SECONDS_PER_BYTE,
+                                 elapsed_s, payload_curve, payload_spec,
+                                 study_timer)
+
+from .common import BenchContext, Row
+
+BACKENDS = ("shardmap-csp", "shardmap-pipeline")
+
+
+def run(ctx: BenchContext = None) -> List[Row]:
+    ctx = ctx or BenchContext()
+    timer = study_timer(ctx.timer, seconds_per_byte=SECONDS_PER_BYTE)
+    rows: List[Row] = []
+    for backend in BACKENDS:
+        results = {}
+        for overlap in (False, True):
+            for ob in PAYLOAD_BYTES:
+                spec = payload_spec(backend=backend, comm_overlap=overlap,
+                                    output_bytes=ob)
+                key = (ob, "overlap" if overlap else "blocking")
+                results[key] = ctx.run(spec, timer=timer)
+        for pt in payload_curve(results):
+            rows.append(Row(
+                f"metg_payload.{backend}.{pt.variant}.bytes{int(pt.x)}",
+                pt.elapsed_s * 1e6,
+                f"overlap_eff={pt.metric:.3f}"))
+        for ob in PAYLOAD_BYTES:
+            blocking = elapsed_s(results[(ob, "blocking")])
+            overlap = elapsed_s(results[(ob, "overlap")])
+            rows.append(Row(
+                f"metg_payload.{backend}.hiding.bytes{ob}",
+                (blocking - overlap) * 1e6,
+                f"speedup={blocking / overlap:.3f}"))
+    return rows

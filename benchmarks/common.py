@@ -46,8 +46,13 @@ class BenchContext:
     written: List[str] = dataclasses.field(default_factory=list)
 
     def run(self, spec: ScenarioSpec, peak_rate: Optional[float] = None,
-            ) -> ScenarioResult:
-        """Measure one scenario (smoke applied) and record its artifact."""
+            timer: Optional[Timer] = None) -> ScenarioResult:
+        """Measure one scenario (smoke applied) and record its artifact.
+
+        ``timer`` overrides the context timer for this scenario — the
+        study families specialize the synthetic clock (worker pools,
+        bytes-per-second) without forking the context.
+        """
         spec = spec.with_smoke(self.smoke or spec.sweep.smoke)
         if self.artifacts_dir:
             # fail before measuring (and before the earlier artifact would
@@ -57,7 +62,8 @@ class BenchContext:
                 raise ValueError(
                     f"scenario {spec.name!r} would overwrite an earlier "
                     f"artifact at {path}; pick names with distinct slugs")
-        result = run_scenario(spec, timer=self.timer, peak_rate=peak_rate)
+        result = run_scenario(spec, timer=timer if timer is not None
+                              else self.timer, peak_rate=peak_rate)
         if self.artifacts_dir:
             self.written.append(write_bench_json(result, self.artifacts_dir))
         return result

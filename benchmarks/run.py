@@ -15,6 +15,10 @@ the paper:
   bench_model_step       §V-C applied to this framework's own dispatch
   bench_moe_dispatch     MoE dispatch comm volume (SP-aware EP vs
                          token replication, dry-run roofline)
+  bench_metg_payload     §V-F study: communication hiding — payload sweep,
+                         comm_overlap on/off (overlap-efficiency curve)
+  bench_metg_imbalance   §V-G study: imbalance mitigation — work stealing
+                         vs static schedule (mitigation-factor curve)
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One:     ``PYTHONPATH=src python -m benchmarks.run --only bench_metg_deps``
@@ -43,6 +47,8 @@ MODULES = [
     "bench_metg_validation",
     "bench_model_step",
     "bench_moe_dispatch",
+    "bench_metg_payload",
+    "bench_metg_imbalance",
 ]
 
 

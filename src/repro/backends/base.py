@@ -7,13 +7,21 @@ workload and blocks until completion — the METG harness times that.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Sequence, Type
+import ast
+import re
+from typing import Callable, Dict, List, Sequence, Tuple, Type
 
 import numpy as np
 
 from ..core.graph import TaskGraph
 
 _BACKENDS: Dict[str, Type["Backend"]] = {}
+
+# "name[key=value,key2=value2]" — the declarative backend-spec string.
+# ScenarioSpec.backend and the Timer protocol carry a single string, so
+# constructor options (schedule="steal", comm_overlap=True, comm="a2a")
+# must be expressible inside it.
+_SPEC_RE = re.compile(r"^([A-Za-z0-9_.-]+)(?:\[(.*)\])?$")
 
 
 def register_backend(name: str):
@@ -29,10 +37,53 @@ def backend_names() -> List[str]:
     return sorted(_BACKENDS)
 
 
+def parse_backend_spec(spec: str) -> Tuple[str, Dict[str, object]]:
+    """Split ``"name[key=value,...]"`` into (name, constructor kwargs).
+
+    Values parse as Python literals (``True``, ``4``, ``1.5``); bare
+    words fall back to strings, so ``host-dynamic[schedule=steal]`` works
+    without quoting.  A bare ``"name"`` parses to ``(name, {})``.
+    """
+    m = _SPEC_RE.match(spec)
+    if m is None:
+        raise ValueError(
+            f"malformed backend spec {spec!r}; expected "
+            f"'name' or 'name[key=value,...]'")
+    name, kwstr = m.group(1), m.group(2)
+    kwargs: Dict[str, object] = {}
+    if kwstr:
+        for part in kwstr.split(","):
+            part = part.strip()
+            if "=" not in part:
+                raise ValueError(
+                    f"malformed backend option {part!r} in {spec!r}; "
+                    f"expected key=value")
+            k, v = (s.strip() for s in part.split("=", 1))
+            if not k:
+                raise ValueError(f"empty option name in backend spec {spec!r}")
+            if v.lower() in ("true", "false"):
+                # accept the JSON/YAML spellings too: a bare 'false'
+                # falling through to the string branch would be truthy
+                kwargs[k] = v.lower() == "true"
+                continue
+            try:
+                kwargs[k] = ast.literal_eval(v)
+            except (ValueError, SyntaxError):
+                kwargs[k] = v  # bare word: a string (steal, a2a, ...)
+    return name, kwargs
+
+
 def get_backend(name: str, **kwargs) -> "Backend":
-    if name not in _BACKENDS:
-        raise KeyError(f"unknown backend {name!r}; known: {backend_names()}")
-    return _BACKENDS[name](**kwargs)
+    """Instantiate a backend from a name or spec string.
+
+    Explicit keyword arguments override options embedded in the spec
+    string: ``get_backend("shardmap-csp[comm=a2a]", comm="halo")`` builds
+    a halo-mode backend.
+    """
+    base, spec_kw = parse_backend_spec(name)
+    if base not in _BACKENDS:
+        raise KeyError(f"unknown backend {base!r}; known: {backend_names()}")
+    return _BACKENDS[base](**{**spec_kw, **kwargs})
 
 
 class Backend:
@@ -49,6 +100,12 @@ class Backend:
     name = "base"
     # paper Table 4 analogue, reported by benchmarks:
     paradigm = ""
+    # deterministic-model hints consumed by bench.timers.SyntheticTimer:
+    # how this backend lays a wavefront's tasks over workers
+    # (core.schedule policy), and whether it issues the next step's
+    # communication ahead of the current kernel body (double buffering)
+    sched_policy = "static"
+    comm_overlap = False
 
     def prepare(self, graphs: Sequence[TaskGraph]) -> Callable[[], List[np.ndarray]]:
         """Compile/stage the workload; returned callable blocks on finish."""

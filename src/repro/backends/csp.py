@@ -12,9 +12,19 @@ that blocks graph columns over a mesh axis and moves payloads with a
 ``CommPlan`` (CSP over ``cols``, the pipeline backend over ``stage``)
 subclasses it and picks an axis + mode preference.
 
-Like MPI CSP, communication and computation strictly alternate — no
-overlap, no task parallelism — which is exactly why the paper finds MPI
-loses its advantage under imbalance and heavy communication (§V-F/G).
+Like MPI CSP, communication and computation strictly alternate by
+default — no overlap, no task parallelism — which is exactly why the
+paper finds MPI loses its advantage under imbalance and heavy
+communication (§V-F/G).  ``comm_overlap=True`` switches both the
+single-graph and the combined multi-graph programs to the
+double-buffered form (the MPI_Isend/Irecv analogue): the scan carry
+holds the *pre-exchanged* context for the current timestep, and each
+step issues the next timestep's exchange immediately after producing its
+payload — ahead of the next kernel body — so XLA's async collectives may
+run while compute proceeds.  The final timestep runs outside the scan
+(its payload needs no exchange), so both forms issue exactly H
+exchanges, and the exchanged values are identical — conformance is
+bit-exact either way.
 """
 from __future__ import annotations
 
@@ -44,7 +54,8 @@ class PlannedSPMDBackend(Backend):
     axis = AXIS
     prefer_ring = False
 
-    def __init__(self, mesh: Mesh | None = None, comm: str = "auto"):
+    def __init__(self, mesh: Mesh | None = None, comm: str = "auto",
+                 comm_overlap: bool = False):
         if mesh is None:
             devs = np.array(jax.devices())
             mesh = Mesh(devs, (self.axis,))
@@ -52,11 +63,13 @@ class PlannedSPMDBackend(Backend):
             raise ValueError(f"unknown comm mode {comm!r}; known: {CC.MODES}")
         self.mesh = mesh
         self.comm = comm
+        self.comm_overlap = bool(comm_overlap)
         self.ndev = mesh.shape[self.axis]
 
     def plan(self, graph: TaskGraph) -> CC.CommPlan:
         return CC.plan_comm(graph, self.ndev, self.axis, comm=self.comm,
-                            prefer_ring=self.prefer_ring)
+                            prefer_ring=self.prefer_ring,
+                            comm_overlap=self.comm_overlap)
 
     def prepare(self, graphs: Sequence[TaskGraph]):
         progs = [self._prepare_one(g) for g in graphs]
@@ -81,6 +94,26 @@ class PlannedSPMDBackend(Backend):
             # the carry becomes device-varying after the first exchange;
             # mark it so from the start (shard_map vma typing)
             payload0 = pcast(payload0, (self.axis,), to="varying")
+            ts = jnp.arange(graph.height, dtype=jnp.uint32)
+
+            if plan.comm_overlap:
+                # double-buffered: the carry holds this step's already-
+                # exchanged context; each step issues the *next* step's
+                # exchange ahead of the next kernel body.  The last
+                # timestep runs outside the scan — its payload needs no
+                # further exchange, so the program issues exactly H
+                # exchanges, the same count as the blocking form
+                def step(ctx_payload, xs):
+                    t, mat_t, it_t = xs
+                    new = body.timestep(graph, t, ctx_payload, mat_t, it_t,
+                                        cols=cols, dynamic=dynamic)
+                    return plan.exchange(new), None
+
+                ctx, _ = jax.lax.scan(
+                    step, plan.exchange(payload0),
+                    (ts[:-1], lmats_l[:-1], iters_l[:-1]))
+                return body.timestep(graph, ts[-1], ctx, lmats_l[-1],
+                                     iters_l[-1], cols=cols, dynamic=dynamic)
 
             def step(payload, xs):
                 t, mat_t, it_t = xs
@@ -89,7 +122,6 @@ class PlannedSPMDBackend(Backend):
                                     cols=cols, dynamic=dynamic)
                 return new, None
 
-            ts = jnp.arange(graph.height, dtype=jnp.uint32)
             final, _ = jax.lax.scan(step, payload0, (ts, lmats_l, iters_l))
             return final
 
@@ -137,6 +169,31 @@ class PlannedSPMDBackend(Backend):
                 pcast(jnp.zeros((p.local, g.payload_elems), jnp.float32),
                       (self.axis,), to="varying")
                 for p, g in zip(plans, graphs))
+            ts = jnp.arange(height, dtype=jnp.uint32)
+
+            if self.comm_overlap:
+                # as in _compile_one: the last tick runs outside the scan
+                # so every pipeline issues exactly H exchanges
+                def step(ctxs, xs):
+                    t, mats_t, its_t = xs
+                    new = tuple(
+                        body.timestep(g, t, ctx, m, it,
+                                      cols=cols, dynamic=dyn)
+                        for g, ctx, m, it, cols, dyn in zip(
+                            graphs, ctxs, mats_t, its_t, colss, dynamics))
+                    return tuple(p.exchange(n)
+                                 for p, n in zip(plans, new)), None
+
+                ctxs, _ = jax.lax.scan(
+                    step,
+                    tuple(p.exchange(c) for p, c in zip(plans, payloads)),
+                    (ts[:-1], tuple(m[:-1] for m in lmats_l),
+                     tuple(i[:-1] for i in iters_l)))
+                return tuple(
+                    body.timestep(g, ts[-1], ctx, m[-1], it[-1],
+                                  cols=cols, dynamic=dyn)
+                    for g, ctx, m, it, cols, dyn in zip(
+                        graphs, ctxs, lmats_l, iters_l, colss, dynamics))
 
             def step(carry, xs):
                 t, mats_t, its_t = xs
@@ -147,7 +204,6 @@ class PlannedSPMDBackend(Backend):
                         graphs, plans, carry, mats_t, its_t, colss, dynamics))
                 return new, None
 
-            ts = jnp.arange(height, dtype=jnp.uint32)
             final, _ = jax.lax.scan(step, payloads, (ts, lmats_l, iters_l))
             return final
 

@@ -5,6 +5,22 @@ Swift/T): every task is a separate device invocation issued by the host,
 with payload gather/scatter through host memory.  This is the high-overhead
 end of the METG spectrum — per-task cost is dominated by dispatch, exactly
 like the paper's §V-C findings for data-analytics systems.
+
+Two executor schedules (paper §V-G, the load-imbalance study):
+
+``schedule="static"``
+    Column-order dispatch — each wavefront's tasks issue in static column
+    ownership order, the per-task analogue of an MPI rank walking its
+    block.
+
+``schedule="steal"``
+    Work-stealing dispatch — each wavefront's tasks issue in the greedy
+    claim order of ``core.schedule.steal_schedule``: whenever a simulated
+    worker goes idle it claims the longest unclaimed task, so imbalanced
+    wavefronts re-pack instead of waiting on the slowest static block.
+    Values are bit-identical to static (only issue *order* changes);
+    the deterministic fake clock (``SyntheticTimer(workers=...)``) charges
+    the matching makespan, which is where the mitigation shows up.
 """
 from __future__ import annotations
 
@@ -16,18 +32,59 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.graph import CHECKSUM_MOD, TaskGraph
+from ..core.schedule import steal_schedule
 from . import body
 from .base import Backend, register_backend
+
+SCHEDULES = ("static", "steal")
 
 
 @register_backend("host-dynamic")
 class HostBackend(Backend):
     paradigm = "dynamic per-task host dispatch (Dask/Spark analogue)"
 
-    @staticmethod
-    def _dispatch_timestep(g: TaskGraph, fn, iters, store, t: int, radix: int):
+    def __init__(self, schedule: str = "static", workers: int = 4):
+        if schedule not in SCHEDULES:
+            raise ValueError(
+                f"unknown schedule {schedule!r}; known: {SCHEDULES}")
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self.schedule = schedule
+        self.workers = workers
+        self.sched_policy = "steal" if schedule == "steal" else "static"
+
+    def _wavefront_order(self, graph: TaskGraph, iters: np.ndarray,
+                         t: int) -> List[int]:
+        """Column issue order for timestep ``t`` under this schedule."""
+        if self.schedule == "static":
+            return list(range(graph.width))
+        return steal_schedule(iters[t].astype(np.float64), self.workers)[0]
+
+    def _wavefront_orders(self, graph: TaskGraph,
+                          iters: np.ndarray) -> List[List[int]]:
+        """Issue order of every wavefront, precomputed at prepare time so
+        the timed runner pays dispatch only (the claim order is a pure
+        function of the graph — recomputing it per run would charge the
+        steal schedule scheduling overhead static never pays)."""
+        return [self._wavefront_order(graph, iters, t)
+                for t in range(graph.height)]
+
+    def dispatch_order(self, graph: TaskGraph) -> List[Tuple[int, int]]:
+        """The full (t, i) issue sequence ``prepare`` walks (pure, no jax).
+
+        Wavefronts issue strictly in timestep order — all dependencies
+        live in t-1, so any within-wavefront permutation is legal — which
+        is what the work-stealing property tests assert.
+        """
+        _, iters = body.graph_static_inputs(graph)
+        return [(t, i)
+                for t, order in enumerate(self._wavefront_orders(graph, iters))
+                for i in order]
+
+    def _dispatch_timestep(self, g: TaskGraph, fn, iters, store, t: int,
+                           radix: int, order: Sequence[int]):
         """Issue every task of timestep ``t`` (and retire timestep t-2)."""
-        for i in range(g.width):
+        for i in order:
             deps = g.deps(t, i)
             pads = jnp.zeros((radix, g.payload_elems), jnp.float32)
             if deps:
@@ -46,14 +103,18 @@ class HostBackend(Backend):
     def prepare(self, graphs: Sequence[TaskGraph]):
         task_fns = [self._compile_task(g) for g in graphs]
         statics = [body.graph_static_inputs(g) for g in graphs]
+        orders = [self._wavefront_orders(g, iters)
+                  for g, (mats, iters) in zip(graphs, statics)]
 
         def runner() -> List[np.ndarray]:
             finals: List[np.ndarray] = []
-            for g, fn, (mats, iters) in zip(graphs, task_fns, statics):
+            for g, fn, (mats, iters), g_orders in zip(
+                    graphs, task_fns, statics, orders):
                 radix = max(1, g.max_radix())
                 store: Dict[Tuple[int, int], jax.Array] = {}
                 for t in range(g.height):
-                    self._dispatch_timestep(g, fn, iters, store, t, radix)
+                    self._dispatch_timestep(g, fn, iters, store, t, radix,
+                                            g_orders[t])
                 row = jnp.stack([store[(g.height - 1, i)] for i in range(g.width)])
                 finals.append(np.asarray(jax.block_until_ready(row)))
             return finals
@@ -75,15 +136,18 @@ class HostBackend(Backend):
         task_fns = [self._compile_task(g) for g in graphs]
         statics = [body.graph_static_inputs(g) for g in graphs]
         radii = [max(1, g.max_radix()) for g in graphs]
+        orders = [self._wavefront_orders(g, iters)
+                  for g, (mats, iters) in zip(graphs, statics)]
 
         def runner() -> List[np.ndarray]:
             stores: List[Dict[Tuple[int, int], jax.Array]] = [
                 {} for _ in graphs]
             for t in range(max(g.height for g in graphs)):
-                for g, fn, (mats, iters), store, radix in zip(
-                        graphs, task_fns, statics, stores, radii):
+                for g, fn, (mats, iters), store, radix, g_orders in zip(
+                        graphs, task_fns, statics, stores, radii, orders):
                     if t < g.height:
-                        self._dispatch_timestep(g, fn, iters, store, t, radix)
+                        self._dispatch_timestep(g, fn, iters, store, t, radix,
+                                                g_orders[t])
             finals: List[np.ndarray] = []
             for g, store in zip(graphs, stores):
                 row = jnp.stack(

@@ -16,6 +16,12 @@ sweeps: graphs whose deps also reach right fall back to the plan's
 (every pattern x every backend) unmodified.  Multi-graph scenarios
 (``run_many``) inherit ``PlannedSPMDBackend``'s combined program: every
 pipeline advances one clock tick per scan step, rings interleaved.
+
+``comm_overlap=True`` (inherited from ``PlannedSPMDBackend``) switches
+to the double-buffered program: the activation ring transfer for clock
+tick t+1 is issued right after tick t's stage body — the async
+stage-to-stage send a pipelined runtime posts while the next microbatch
+computes.
 """
 from __future__ import annotations
 

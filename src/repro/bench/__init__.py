@@ -10,6 +10,10 @@
 - ``artifact`` — schema-checked ``BENCH_<scenario>.json`` writer
 - ``compare``  — artifact diffing: the bench-regression gate
                  (``benchmarks/run.py --baseline``)
+- ``studies``  — the communication-hiding (``metg_payload``) and
+                 load-imbalance (``metg_imbalance``) scenario families
+                 and their derived metrics (overlap efficiency,
+                 mitigation factor)
 - ``moe``      — the ``moe_dispatch`` comm-volume scenario (SP-aware EP
                  vs token replication, dry-run roofline)
 
@@ -31,6 +35,11 @@ from .artifact import (SCHEMA_VERSION, bench_artifact, read_bench_json,
 from .compare import (ComparisonResult, PointDelta, bench_json_names,
                       compare_artifacts, compare_dirs, format_report,
                       scenario_family)
+from .studies import (StudyPoint, elapsed_s, imbalance_spec,
+                      imbalance_study_specs, mitigation_curve,
+                      mitigation_factor, observed_rate, overlap_efficiency,
+                      payload_curve, payload_spec, payload_study_specs,
+                      study_timer)
 from .moe import (MoEDispatchSpec, analytic_a2a_bytes, lowered_moe_hlo,
                   moe_dispatch_report)
 
@@ -62,6 +71,18 @@ __all__ = [
     "compare_artifacts",
     "compare_dirs",
     "format_report",
+    "StudyPoint",
+    "elapsed_s",
+    "imbalance_spec",
+    "imbalance_study_specs",
+    "mitigation_curve",
+    "mitigation_factor",
+    "observed_rate",
+    "overlap_efficiency",
+    "payload_curve",
+    "payload_spec",
+    "payload_study_specs",
+    "study_timer",
     "MoEDispatchSpec",
     "analytic_a2a_bytes",
     "lowered_moe_hlo",

@@ -105,26 +105,77 @@ class SyntheticTimer:
     """Closed-form fake clock: ``tasks * (overhead + iters * per_iter)``.
 
     Imbalance-aware (uses each task's true duration), dependency-aware when
-    ``seconds_per_dependency`` is set, and independent of the backend — the
-    same model ``tests/test_metg.py`` builds points from by hand, so METG
-    crossovers are exactly predictable: efficiency hits 50 % where
-    ``iters * seconds_per_iteration == overhead_per_task``, i.e. at
-    granularity ``2 * overhead_per_task``.
+    ``seconds_per_dependency`` is set, and — in its default configuration —
+    independent of the backend: the same model ``tests/test_metg.py``
+    builds points from by hand, so METG crossovers are exactly
+    predictable: efficiency hits 50 % where ``iters *
+    seconds_per_iteration == overhead_per_task``, i.e. at granularity
+    ``2 * overhead_per_task``.
+
+    Two study extensions consult the backend's deterministic-model hints
+    (``Backend.sched_policy`` / ``Backend.comm_overlap``); both are off by
+    default, in which case the backend is never instantiated:
+
+    ``workers > 1``
+        Compute time becomes the sum of per-wavefront makespans under the
+        backend's scheduling policy (``core.schedule``): static column
+        ownership pays the slowest block, work stealing re-packs greedily
+        — the paper's §V-G imbalance-mitigation axis.  A backend that
+        declares its own pool size (``HostBackend.workers``) overrides
+        ``workers``, so the charged makespan always models the schedule
+        the executor actually computed.
+
+    ``seconds_per_byte > 0``
+        Each dependency moves ``output_bytes`` of payload; the per-graph
+        communication term is ``ndeps * (seconds_per_dependency +
+        output_bytes * seconds_per_byte)``.  Backends that double-buffer
+        (``comm_overlap``) hide it behind compute — ``max(compute,
+        comm)`` — while blocking backends pay ``compute + comm`` — the
+        paper's §V-F communication-hiding axis.
     """
 
     overhead_per_task: float = 20e-6
     seconds_per_iteration: float = 50e-9
     seconds_per_dependency: float = 0.0
+    seconds_per_byte: float = 0.0
+    workers: int = 1
     name: str = field(default="synthetic", init=False)
+    _backends: Dict[str, object] = field(default_factory=dict, repr=False)
+
+    def _compute_seconds(self, g: TaskGraph, policy: str,
+                         workers: int) -> float:
+        if workers <= 1 or policy == "serial":
+            return (g.num_tasks * self.overhead_per_task
+                    + g.total_iterations() * self.seconds_per_iteration)
+        from ..core.schedule import wavefront_makespan
+
+        wall = 0.0
+        for t in range(g.height):
+            costs = [self.overhead_per_task
+                     + g.task_iterations(t, i) * self.seconds_per_iteration
+                     for i in range(g.width)]
+            wall += wavefront_makespan(costs, workers, policy)
+        return wall
+
+    def _comm_seconds(self, g: TaskGraph) -> float:
+        per_dep = (self.seconds_per_dependency
+                   + g.output_bytes * self.seconds_per_byte)
+        if per_dep <= 0:
+            return 0.0
+        return int(g.dependence_matrices().sum()) * per_dep
 
     def measure(self, backend_name: str, graphs: Sequence[TaskGraph]) -> float:
+        policy, overlap, workers = "serial", False, self.workers
+        if self.workers > 1 or self.seconds_per_byte > 0:
+            be = cached_backend(self._backends, backend_name)
+            policy = getattr(be, "sched_policy", "static")
+            overlap = bool(getattr(be, "comm_overlap", False))
+            workers = int(getattr(be, "workers", self.workers))
         wall = 0.0
         for g in graphs:
-            wall += (g.num_tasks * self.overhead_per_task
-                     + g.total_iterations() * self.seconds_per_iteration)
-            if self.seconds_per_dependency > 0:
-                ndeps = int(g.dependence_matrices().sum())
-                wall += ndeps * self.seconds_per_dependency
+            compute = self._compute_seconds(g, policy, workers)
+            comm = self._comm_seconds(g)
+            wall += max(compute, comm) if overlap else compute + comm
         return wall
 
 

@@ -105,7 +105,14 @@ class TaskGraph:
         return max(MIN_PAYLOAD_ELEMS, self.output_bytes // 4)
 
     def task_iterations(self, t: int, i: int) -> int:
-        """Per-task duration after imbalance scaling."""
+        """Per-task duration after imbalance scaling.
+
+        Rounding bound (pinned by the conservation property test): the
+        returned count is within 0.5 of the analytic
+        ``max(1, iterations * (1 - imbalance * u(t, i)))``, so the graph
+        total is conserved within ``num_tasks / 2`` of the analytic sum,
+        and every task stays in ``[1, iterations]``.
+        """
         k = self.kernel
         if k.imbalance <= 0.0:
             return k.iterations

@@ -107,6 +107,11 @@ class CommPlan:
     halo: int            # exchange width (0 => no communication)
     local_mats: np.ndarray   # (H, padded_width, ctx) uint8
     iters: np.ndarray        # (H, padded_width) int32
+    # double-buffered communication: the executing program issues timestep
+    # t+1's exchange right after timestep t's payload is produced (ahead
+    # of t+1's kernel body), so XLA's async collectives may overlap with
+    # compute.  Pure program-shape flag: ``exchange`` itself is identical.
+    comm_overlap: bool = False
     # a2a mode only: [src, dst] row counts and padded send-row indices
     send_counts: Optional[np.ndarray] = None   # (ndev, ndev) int64
     a2a_cap: int = 0                           # rows per (src, dst) buffer
@@ -190,6 +195,7 @@ def plan_comm(
     axis: str,
     comm: str = "auto",
     prefer_ring: bool = False,
+    comm_overlap: bool = False,
 ) -> CommPlan:
     """Build the communication plan for ``graph`` over ``ndev`` ranks.
 
@@ -198,7 +204,9 @@ def plan_comm(
     allgather when the dependence relation is sparse).  With
     ``prefer_ring`` (pipeline backends), graphs whose deps reach only
     toward lower columns use the one-directional ring instead of the
-    bidirectional halo.
+    bidirectional halo.  ``comm_overlap`` asks the executing backend for
+    the double-buffered program shape (next step's exchange issued ahead
+    of this step's kernel body); results are bit-identical either way.
     """
     if comm not in MODES:
         raise ValueError(f"unknown comm mode {comm!r}; known: {MODES}")
@@ -230,7 +238,9 @@ def plan_comm(
 
     mats, iters = _padded_static_inputs(graph, padded)
     if mode == "a2a":
-        return _plan_a2a(graph, ndev, axis, mats, iters, padded, local)
+        plan = _plan_a2a(graph, ndev, axis, mats, iters, padded, local)
+        return dataclasses.replace(plan, comm_overlap=comm_overlap) \
+            if comm_overlap else plan
     if mode == "allgather":
         halo = 0
         lmats = mats  # context is the full gathered (padded) width
@@ -248,6 +258,7 @@ def plan_comm(
     return CommPlan(
         mode=mode, axis=axis, ndev=ndev, width=W, padded_width=padded,
         local=local, halo=halo, local_mats=lmats, iters=iters,
+        comm_overlap=comm_overlap,
     )
 
 

@@ -74,6 +74,39 @@ def test_heterogeneous_concurrent_graphs(backend):
         check_outputs(g, o)
 
 
+def test_backend_spec_strings():
+    """get_backend accepts 'name[key=value,...]' — the form
+    ScenarioSpec.backend and the Timer protocol carry mode options in."""
+    from repro.backends.base import parse_backend_spec
+
+    assert parse_backend_spec("xla-scan") == ("xla-scan", {})
+    assert parse_backend_spec("host-dynamic[schedule=steal,workers=2]") == \
+        ("host-dynamic", {"schedule": "steal", "workers": 2})
+    assert parse_backend_spec("shardmap-csp[comm_overlap=True]") == \
+        ("shardmap-csp", {"comm_overlap": True})
+    be = get_backend("host-dynamic[schedule=steal,workers=2]")
+    assert be.schedule == "steal" and be.workers == 2
+    assert be.sched_policy == "steal"
+    # explicit kwargs override spec-string options
+    be = get_backend("host-dynamic[schedule=steal]", schedule="static")
+    assert be.schedule == "static" and be.sched_policy == "static"
+    be = get_backend("shardmap-csp[comm_overlap=True]")
+    assert be.comm_overlap is True
+    # JSON/YAML boolean spellings must not fall through to truthy strings
+    assert parse_backend_spec("x[a=false,b=TRUE]") == \
+        ("x", {"a": False, "b": True})
+    assert get_backend("shardmap-csp[comm_overlap=false]").comm_overlap \
+        is False
+    with pytest.raises(KeyError, match="unknown backend"):
+        get_backend("no-such-backend[comm_overlap=True]")
+    with pytest.raises(ValueError, match="malformed"):
+        get_backend("host-dynamic[schedule]")
+    with pytest.raises(ValueError, match="malformed"):
+        get_backend("host-dynamic[")
+    with pytest.raises(ValueError):
+        get_backend("host-dynamic", schedule="nope")
+
+
 def test_validation_catches_corruption():
     g = make_graph(width=4, height=6, pattern="stencil", iterations=3)
     out = get_backend("xla-scan").run([g])[0].copy()

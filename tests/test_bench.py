@@ -486,6 +486,271 @@ def test_committed_baselines_are_valid_artifacts():
             f"{f}: baselines must use the deterministic fake clock")
 
 
+# -------------------------------------------------- core.metg compat shim
+def test_core_metg_compat_shim_pins_reexports():
+    """repro.core.metg is a pure re-export of repro.bench.metg: every
+    advertised name must be the *same object* as the implementation's,
+    and the historical import surface (repro.core.metg + repro.core)
+    must keep resolving — so the next refactor cannot silently break the
+    old path.  (Lives here, not in test_metg.py, so it runs even when
+    hypothesis is absent.)"""
+    import repro.bench.metg as impl
+    import repro.core as core
+    import repro.core.metg as shim
+
+    expected = {"METGResult", "SweepPoint", "compute_metg",
+                "efficiency_curve", "geometric_iterations", "run_sweep",
+                "time_run"}
+    assert set(shim.__all__) == expected
+    for name in shim.__all__:
+        assert getattr(shim, name) is getattr(impl, name), name
+    # the package-level historical surface rides the same objects
+    for name in ("METGResult", "SweepPoint", "compute_metg",
+                 "geometric_iterations", "run_sweep"):
+        assert getattr(core, name) is getattr(impl, name), name
+    # and the shim stays callable end-to-end (not just importable)
+    pts = [impl.SweepPoint(iterations=it, wall_time=64 * (1e-5 + it * 1e-8),
+                           num_tasks=64, useful_work=64.0 * it * 2048,
+                           granularity=1e-5 + it * 1e-8)
+           for it in shim.geometric_iterations(1 << 16, 1, 2.0)]
+    assert shim.compute_metg(pts, threshold=0.5).metg is not None
+
+
+# ------------------------------------------------------- study families
+def test_synthetic_timer_default_path_never_touches_the_backend():
+    """The fake clock's study extensions (workers, seconds_per_byte) are
+    opt-in: the default configuration must keep accepting backend names
+    that do not exist (the closed-form model is backend-free)."""
+    spec = ScenarioSpec(name="fake", backend="no-such-backend",
+                        pattern="trivial", width=4, height=4)
+    assert SyntheticTimer().measure(spec.backend, spec.graphs(8)) > 0
+
+
+def test_synthetic_worker_model_matches_core_schedule():
+    """workers > 1 charges the per-wavefront makespan of the backend's
+    scheduling policy — exactly core.schedule's numbers."""
+    from repro.core import make_graph
+    from repro.core.schedule import wavefront_makespan
+
+    g = make_graph(width=8, height=6, pattern="stencil", iterations=64,
+                   imbalance=2.0)
+    o, w = 20e-6, 2e-6
+    timer = SyntheticTimer(overhead_per_task=o, seconds_per_iteration=w,
+                           workers=4)
+    for sched, policy in (("static", "static"), ("steal", "steal")):
+        wall = timer.measure(f"host-dynamic[schedule={sched}]", [g])
+        want = sum(
+            wavefront_makespan(
+                [o + g.task_iterations(t, i) * w for i in range(g.width)],
+                4, policy)
+            for t in range(g.height))
+        assert wall == pytest.approx(want, rel=1e-12), sched
+    # the backend's own pool size wins over the timer's — the charged
+    # makespan must model the schedule the executor actually computed
+    wall = timer.measure("host-dynamic[schedule=steal,workers=2]", [g])
+    want = sum(
+        wavefront_makespan(
+            [o + g.task_iterations(t, i) * w for i in range(g.width)],
+            2, "steal")
+        for t in range(g.height))
+    assert wall == pytest.approx(want, rel=1e-12)
+
+
+def test_steal_mitigation_strictly_beats_static_at_imb2():
+    """Acceptance: on the deterministic fake clock at imbalance=2.0 the
+    work-stealing schedule retains strictly more of its balanced
+    throughput than the static schedule."""
+    from repro.bench.studies import (IMBALANCE_SECONDS_PER_ITERATION,
+                                     STUDY_WORKERS, imbalance_spec,
+                                     mitigation_curve, study_timer)
+
+    timer = study_timer(SyntheticTimer(), workers=STUDY_WORKERS,
+                        seconds_per_iteration=IMBALANCE_SECONDS_PER_ITERATION)
+    results = {}
+    for sched in ("static", "steal"):
+        for imb in (0.0, 2.0):
+            results[(imb, sched)] = run_scenario(
+                imbalance_spec(schedule=sched, imbalance=imb), timer=timer)
+    metric = {(p.x, p.variant): p.metric for p in mitigation_curve(results)}
+    assert metric[(0.0, "static")] == metric[(0.0, "steal")] == 1.0
+    assert metric[(2.0, "steal")] > metric[(2.0, "static")]
+
+
+def test_comm_overlap_never_slower_on_fake_clock():
+    """Acceptance: comm_overlap=True elapsed <= comm_overlap=False at
+    every swept payload (max(compute, comm) vs compute + comm), for both
+    SPMD backends."""
+    from repro.bench.studies import (PAYLOAD_BYTES, SECONDS_PER_BYTE,
+                                     elapsed_s, payload_spec, study_timer)
+
+    timer = study_timer(SyntheticTimer(), seconds_per_byte=SECONDS_PER_BYTE)
+    for backend in ("shardmap-csp", "shardmap-pipeline"):
+        for ob in PAYLOAD_BYTES:
+            off = run_scenario(
+                payload_spec(backend, comm_overlap=False, output_bytes=ob),
+                timer=timer)
+            on = run_scenario(
+                payload_spec(backend, comm_overlap=True, output_bytes=ob),
+                timer=timer)
+            assert elapsed_s(on) <= elapsed_s(off), (backend, ob)
+            # both terms are positive here, so hiding is strictly real
+            assert elapsed_s(on) < elapsed_s(off), (backend, ob)
+
+
+def test_committed_study_baselines_show_the_tentpole_claims():
+    """The acceptance numbers must be visible in the committed
+    benchmarks/baselines/ snapshot itself: the stealing schedule's
+    mitigation factor strictly beats static at imbalance=2.0, and the
+    overlap variant's elapsed is <= blocking at every payload for
+    shardmap-csp."""
+    basedir = os.path.join(os.path.dirname(__file__), "..",
+                           "benchmarks", "baselines")
+
+    def point(name):
+        doc = read_bench_json(os.path.join(basedir, f"BENCH_{name}.json"))
+        assert len(doc["points"]) == 1, name  # fixed-granularity cell
+        return doc["points"][0]
+
+    def mitigation(sched, imb):
+        obs = point(f"metg_imbalance.host-dynamic.{sched}.imb{imb}")
+        bal = point(f"metg_imbalance.host-dynamic.{sched}.imb0.0")
+        return obs["rate"] / bal["rate"]
+
+    assert mitigation("steal", 2.0) > mitigation("static", 2.0)
+    from repro.bench.studies import PAYLOAD_BYTES
+    for ob in PAYLOAD_BYTES:
+        blocking = point(f"metg_payload.shardmap-csp.blocking.bytes{ob}")
+        overlap = point(f"metg_payload.shardmap-csp.overlap.bytes{ob}")
+        assert overlap["wall_time_s"] <= blocking["wall_time_s"], ob
+
+
+def test_study_curve_builders_validate_inputs():
+    from repro.bench.studies import (imbalance_spec, mitigation_curve,
+                                     mitigation_factor, overlap_efficiency)
+
+    with pytest.raises(ValueError, match="positive"):
+        overlap_efficiency(0.0, 1.0)
+    with pytest.raises(ValueError, match="positive"):
+        mitigation_factor(0.0, 1.0)
+    # mitigation needs the balanced baseline cell
+    res = run_scenario(imbalance_spec(schedule="steal", imbalance=1.5),
+                       timer=SyntheticTimer())
+    with pytest.raises(ValueError, match="balanced"):
+        mitigation_curve({(1.5, "steal"): res})
+
+
+def test_task_iterations_conservation_within_rounding_bound():
+    """Imbalance scaling conserves the graph's total iterations within
+    the documented rounding bound (num_tasks / 2 of the analytic sum),
+    and every task stays in [1, iterations]."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.core import make_graph
+    from repro.core.graph import _imbalance_u
+
+    @settings(max_examples=40, deadline=None)
+    @given(width=st.integers(1, 16), height=st.integers(1, 10),
+           iters=st.integers(1, 4096),
+           imbalance=st.sampled_from([0.0, 0.5, 1.5, 3.0]),
+           seed=st.integers(0, 3))
+    def check(width, height, iters, imbalance, seed):
+        g = make_graph(width=width, height=height, pattern="trivial",
+                       iterations=iters, imbalance=imbalance, seed=seed)
+        per = [g.task_iterations(t, i)
+               for t in range(height) for i in range(width)]
+        assert all(1 <= p <= iters for p in per)
+        assert g.total_iterations() == sum(per)  # the single definition
+        analytic = sum(
+            max(1.0, iters * (1.0 - imbalance * _imbalance_u(t, i, seed)))
+            for t in range(height) for i in range(width))
+        assert abs(g.total_iterations() - analytic) <= 0.5 * g.num_tasks
+
+    check()
+
+
+# ------------------------------------- study-family compare negative paths
+def test_compare_refuses_mixed_family_study_artifacts():
+    """A metg_payload artifact diffed against a metg_imbalance artifact is
+    an identity mismatch, not a perf signal — the differ must refuse
+    before comparing any numbers."""
+    from repro.bench import compare_artifacts
+    from repro.bench.studies import imbalance_spec, payload_spec
+
+    pay = bench_artifact(run_scenario(payload_spec(output_bytes=16),
+                                      timer=SyntheticTimer()))
+    imb = bench_artifact(run_scenario(imbalance_spec(imbalance=0.0),
+                                      timer=SyntheticTimer()))
+    res = compare_artifacts(pay, imb, rel_threshold=0.25)
+    assert not res.ok
+    assert any("scenario.name changed" in r for r in res.regressions)
+    assert res.metg_baseline is None and not res.points  # refused early
+
+
+def test_compare_dirs_vanished_study_scenario_scoped_within_family(tmp_path):
+    """Family scoping over the new families: a vanished metg_payload cell
+    regresses inside families={"metg_payload"}, while the untouched
+    metg_imbalance baselines are skipped (a partial --only run)."""
+    from repro.bench import compare_dirs
+    from repro.bench.compare import scenario_family
+    from repro.bench.studies import imbalance_spec, payload_spec
+
+    assert scenario_family(
+        "BENCH_metg_payload.shardmap-csp.overlap.bytes16.json") == \
+        "metg_payload"
+    assert scenario_family(
+        "BENCH_metg_imbalance.host-dynamic.steal.imb2.0.json") == \
+        "metg_imbalance"
+    base, cur = tmp_path / "base", tmp_path / "cur"
+    for ob in (16, 4096):
+        res = run_scenario(payload_spec(output_bytes=ob),
+                           timer=SyntheticTimer())
+        write_bench_json(res, str(base))
+        if ob == 16:
+            write_bench_json(res, str(cur))  # bytes4096 vanishes
+    res = run_scenario(imbalance_spec(imbalance=0.0), timer=SyntheticTimer())
+    write_bench_json(res, str(base))  # other family, never remeasured
+    scoped = compare_dirs(str(base), str(cur), families={"metg_payload"})
+    assert len(scoped) == 2  # imbalance baseline skipped entirely
+    assert any(not r.ok and "missing" in "".join(r.regressions)
+               for r in scoped)
+    # with the vanished cell restored, the scoped diff is clean
+    res = run_scenario(payload_spec(output_bytes=4096),
+                       timer=SyntheticTimer())
+    write_bench_json(res, str(cur))
+    assert all(r.ok for r in compare_dirs(str(base), str(cur),
+                                          families={"metg_payload"}))
+
+
+def test_study_regression_fixture_trips_the_gate(tmp_path, capsys):
+    """End-to-end: a synthetic-timer baseline whose study numbers are
+    made 2x faster than reality must fail `--baseline` with a nonzero
+    exit (the committed-snapshot contract for the new families)."""
+    from benchmarks.run import main
+
+    good = tmp_path / "good"
+    main(["--smoke", "--timer", "synthetic", "--only",
+          "bench_metg_imbalance", "--artifacts", str(good)])
+    capsys.readouterr()
+    tampered = tmp_path / "tampered"
+    os.makedirs(tampered)
+    for fname in os.listdir(good):
+        doc = read_bench_json(os.path.join(good, fname))
+        for p in doc["points"]:
+            p["wall_time_s"] *= 0.5  # baseline claims twice the speed
+        if doc["metg_s"] is not None:
+            doc["metg_s"] *= 0.5
+        with open(os.path.join(tampered, fname), "w") as f:
+            json.dump(doc, f)
+    with pytest.raises(SystemExit) as exc:
+        main(["--smoke", "--timer", "synthetic", "--only",
+              "bench_metg_imbalance", "--artifacts", str(tmp_path / "cur"),
+              "--baseline", str(tampered)])
+    assert exc.value.code == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out
+
+
 # --------------------------------------------------- moe_dispatch scenario
 def test_moe_dispatch_sp_cuts_a2a_volume_by_model_axis():
     """The tentpole's measurable claim, asserted (not just printed): the

@@ -112,6 +112,63 @@ def imbalanced_graph(pattern="stencil"):
                       imbalance=0.7, **PATTERN_KW.get(pattern, {}))
 
 
+# the study modes (paper §V-F/G mechanisms): work-stealing dispatch and
+# double-buffered communication.  Spec strings go through
+# get_backend("name[key=value]"), the same form ScenarioSpec.backend
+# carries, so these cells also pin the spec-string path.  On the CI
+# multi-rank step (JAX_NUM_CPU_DEVICES=8) the 6-wide graphs are ragged
+# over 8 ranks.
+STUDY_MODE_BACKENDS = (
+    "host-dynamic[schedule=steal]",
+    "shardmap-csp[comm_overlap=True]",
+    "shardmap-pipeline[comm_overlap=True]",
+)
+
+
+@pytest.mark.parametrize("pattern", pattern_names())
+@pytest.mark.parametrize("backend", STUDY_MODE_BACKENDS)
+def test_study_mode_conformance(backend, pattern, oracle):
+    """schedule="steal" and comm_overlap=True must be bit-exact vs the
+    oracle for every pattern (their mechanisms reorder dispatch / rotate
+    the exchange, never the values)."""
+    g = conformance_graph(pattern)
+    check_outputs(g, get_backend(backend).run([g])[0], expected=oracle(g))
+
+
+@pytest.mark.parametrize("backend", STUDY_MODE_BACKENDS)
+def test_study_mode_imbalanced_and_ragged(backend):
+    """The study modes under the conditions they exist for: imbalanced
+    kernels (heterogeneous per-task durations) and ragged widths (10
+    columns pad over 4/8 ranks; steal wavefronts wider than the worker
+    pool)."""
+    for g in (
+        imbalanced_graph(),
+        make_graph(width=10, height=6, pattern="stencil", iterations=5,
+                   imbalance=1.5),
+        make_graph(width=3, height=5, pattern="sweep", iterations=4,
+                   imbalance=2.0),
+    ):
+        check_outputs(g, get_backend(backend).run([g])[0],
+                      expected=execute_reference(g))
+
+
+@pytest.mark.parametrize("backend", STUDY_MODE_BACKENDS)
+def test_study_mode_run_many(backend, oracle):
+    """The concurrent programs in study mode: the combined shard_map scan
+    must double-buffer every graph's exchange, and stealing wavefronts
+    must interleave across graphs, all bit-exact vs the single run."""
+    be = get_backend(backend)
+    for pattern in MULTI_GRAPH_PATTERNS:
+        g = conformance_graph(pattern)
+        alone = np.asarray(be.run([g])[0])
+        outs = be.run_many(replicate(g, 2))
+        assert len(outs) == 2
+        for out in outs:
+            check_outputs(g, out, expected=oracle(g))
+            assert (np.asarray(out)[:, :4] == alone[:, :4]).all(), (
+                backend, pattern)
+
+
 def test_host_dynamic_run_many_imbalanced_kernel():
     """The host backend's interleaved wavefronts under an imbalanced
     kernel: per-task durations differ, so the dispatch interleaving must

@@ -137,6 +137,65 @@ def test_a2a_plan_counts_are_a_permutation(width, ndev, height):
         assert plan.a2a_cap == int(sc.max()), (pattern, width, ndev)
 
 
+@settings(max_examples=25, deadline=None)
+@given(
+    width=st.integers(1, 16),
+    imbalance=st.sampled_from([0.0, 1.5, 3.0]),
+    workers=st.sampled_from([1, 3, 4, 8]),
+)
+def test_steal_dispatch_each_task_once_respecting_deps(width, imbalance,
+                                                       workers):
+    """The work-stealing executor's dispatch sequence, every registered
+    pattern: each task issues exactly once, and every task issues after
+    all of its dependencies (deps live in t-1; wavefronts are strictly
+    ordered, within-wavefront the claim order is free)."""
+    from repro.backends import get_backend
+
+    be = get_backend("host-dynamic", schedule="steal", workers=workers)
+    for pattern in PATTERNS:
+        g = make_graph(width=width, height=5, pattern=pattern,
+                       iterations=7, imbalance=imbalance,
+                       **_params_for(pattern))
+        trace = be.dispatch_order(g)
+        expect = [(t, i) for t in range(g.height) for i in range(g.width)]
+        assert sorted(trace) == expect, pattern  # exactly once each
+        pos = {ti: k for k, ti in enumerate(trace)}
+        for t in range(1, g.height):
+            for i in range(g.width):
+                for j in g.deps(t, i):
+                    assert pos[(t - 1, j)] < pos[(t, i)], (pattern, t, i, j)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    ncols=st.integers(1, 24),
+    workers=st.integers(1, 8),
+    seed=st.integers(0, 5),
+)
+def test_steal_schedule_is_a_permutation_and_never_worse(ncols, workers,
+                                                         seed):
+    """core.schedule invariants: the claim order is a permutation, and
+    the greedy makespan is bounded by serial above and by both the
+    critical path and the perfect packing below (Graham's list-scheduling
+    bound)."""
+    import numpy as np
+
+    from repro.core.schedule import steal_schedule, wavefront_makespan
+
+    rng = np.random.default_rng(seed)
+    costs = rng.uniform(0.1, 10.0, size=ncols)
+    order, start, makespan = steal_schedule(costs, workers)
+    assert sorted(order) == list(range(ncols))
+    assert (start >= 0).all()
+    serial = wavefront_makespan(costs, workers, "serial")
+    assert makespan <= serial + 1e-12
+    lower = max(costs.max(), costs.sum() / workers)
+    assert makespan >= lower - 1e-12
+    # Graham's list-scheduling bound: sum/m + (1 - 1/m) * cmax
+    assert makespan <= costs.sum() / workers \
+        + (1 - 1.0 / workers) * costs.max() + 1e-12
+
+
 def test_pattern_shapes_match_paper_table2():
     """Spot-check the Table 2 relations."""
     g = make_graph(width=8, height=8, pattern="stencil")
