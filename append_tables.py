@@ -1,34 +1,164 @@
-"""Append generated §Tables to EXPERIMENTS.md from results/dryrun.json."""
-import json, sys
-sys.path.insert(0, "src")
-from repro.launch.report import (render_dryrun_table, render_roofline_table,
-                                 row_terms, hbm_total_gb)
+"""Append generated result tables to EXPERIMENTS.md.
 
-results = json.load(open("results/dryrun.json"))
+Two generators share the ``## §Tables (generated)`` marker (everything
+after it is machine-written; text above survives):
 
-out = []
-out.append("\n### Roofline — single pod 16x16 (256 chips), strategy tp+fsdp+sp\n")
-out.append("(memory term excludes Pallas-flash-eliminated attention-quadratic "
-           "traffic; decode rows score bandwidth fraction — see §Roofline)\n")
-out.append(render_roofline_table(results, "pod16x16", "tp+fsdp+sp"))
-out.append("\n\n### Strategy comparison — qwen1.5-0.5b train_4k (§Perf B)\n")
-out.append("| strategy | compute_s | memory_s | collective_s | bound_s | frac | HBM GB |")
-out.append("|---|---|---|---|---|---|---|")
-for strat in ("tp+fsdp+sp", "dp_heavy", "dp_mod"):
-    key = f"qwen1.5-0.5b|train_4k|pod16x16|{strat}"
-    v = results.get(key)
-    if not v or v["status"] != "ok":
-        continue
-    t = row_terms(v)
-    out.append(f"| {strat} | {t['compute_s']:.3f} | {t['memory_s']:.3f} "
-               f"| {t['collective_s']:.3f} | {t['bound_step_s']:.3f} "
-               f"| {t['roofline_fraction']*100:.2f}% | {hbm_total_gb(v):.1f} |")
-out.append("\n\n### Dry-run detail — both meshes, strategy tp+fsdp+sp\n")
-out.append(render_dryrun_table(results, "tp+fsdp+sp"))
-out.append("")
+* ``append_metg_tables`` — the paper-style METG(50%) summary (backend x
+  case, one table per scenario family) aggregated from the
+  ``BENCH_*.json`` artifacts a sweep wrote.  Wired to
+  ``benchmarks/run.py --tables``.
+* ``append_dryrun_tables`` — the legacy roofline tables from
+  ``results/dryrun.json`` (production-mesh studies).
+"""
+from __future__ import annotations
 
-text = open("EXPERIMENTS.md").read()
-marker = "## §Tables (generated)"
-text = text[: text.index(marker) + len(marker)] + "\n" + "\n".join(out)
-open("EXPERIMENTS.md", "w").write(text)
-print("tables appended")
+import argparse
+import glob
+import os
+import sys
+from collections import defaultdict
+from typing import Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "src"))
+
+MARKER = "## §Tables (generated)"
+
+
+def load_metg_artifacts(artifacts_dir: str) -> List[Dict]:
+    """All schema-valid ``BENCH_*.json`` docs under ``artifacts_dir``."""
+    from repro.bench.artifact import read_bench_json
+
+    docs = []
+    for path in sorted(glob.glob(os.path.join(artifacts_dir,
+                                              "BENCH_*.json"))):
+        try:
+            docs.append(read_bench_json(path))
+        except ValueError:
+            continue  # corrupt or foreign artifacts are not table rows
+    return docs
+
+
+def _case_name(scenario: Dict) -> str:
+    """The column label: the scenario name minus family and backend
+    segments (``metg.xla-scan.stencil`` -> ``stencil``)."""
+    parts = scenario["name"].split(".")
+    rest = [p for p in parts[1:] if p != scenario["backend"]]
+    return ".".join(rest) or scenario["pattern"]
+
+
+def render_metg_summary(docs: List[Dict]) -> str:
+    """Markdown METG(50%) tables, one per scenario family (µs cells;
+    ``>sweep`` marks a curve that never reached 50% in its range —
+    the floor sits above the whole sweep)."""
+    families: Dict[str, Dict] = defaultdict(dict)
+    for doc in docs:
+        sc = doc["scenario"]
+        families[sc["name"].split(".")[0]][(sc["backend"],
+                                           _case_name(sc))] = doc
+    out = []
+    for fam in sorted(families):
+        cells = families[fam]
+        backends = sorted({b for b, _ in cells})
+        cases = sorted({c for _, c in cells})
+        out.append(f"\n### METG(50%) — {fam} (µs; '>sweep' = no 50% "
+                   f"crossing in the sweep range)\n")
+        out.append("| backend | " + " | ".join(cases) + " |")
+        out.append("|---" * (len(cases) + 1) + "|")
+        for b in backends:
+            row = [b]
+            for c in cases:
+                doc = cells.get((b, c))
+                if doc is None:
+                    row.append("—")
+                elif doc["metg_s"] is None:
+                    row.append(">sweep")
+                else:
+                    row.append(f"{doc['metg_s'] * 1e6:.2f}")
+            out.append("| " + " | ".join(row) + " |")
+        out.append("")
+    return "\n".join(out)
+
+
+def _splice(md_path: str, body: str) -> str:
+    """Replace everything after the marker with ``body`` (creating the
+    file, or the marker section, when missing)."""
+    if os.path.exists(md_path):
+        text = open(md_path).read()
+    else:
+        text = "# Experiments\n\n" + MARKER + "\n"
+    if MARKER not in text:
+        text = text.rstrip() + "\n\n" + MARKER + "\n"
+    text = text[: text.index(MARKER) + len(MARKER)] + "\n" + body
+    with open(md_path, "w") as f:
+        f.write(text)
+    return md_path
+
+
+def append_metg_tables(artifacts_dir: str,
+                       md_path: str = "EXPERIMENTS.md") -> str:
+    """Aggregate ``BENCH_*.json`` under ``artifacts_dir`` into the METG
+    summary and splice it into ``md_path``; returns the path written."""
+    docs = load_metg_artifacts(artifacts_dir)
+    if not docs:
+        raise ValueError(
+            f"no valid BENCH_*.json artifacts in {artifacts_dir!r}")
+    return _splice(md_path, render_metg_summary(docs) + "\n")
+
+
+def append_dryrun_tables(dryrun_json: str = "results/dryrun.json",
+                         md_path: str = "EXPERIMENTS.md") -> str:
+    """Legacy roofline tables from the compiled dry-run results."""
+    import json
+
+    from repro.launch.report import (hbm_total_gb, render_dryrun_table,
+                                     render_roofline_table, row_terms)
+
+    results = json.load(open(dryrun_json))
+    out = []
+    out.append("\n### Roofline — single pod 16x16 (256 chips), "
+               "strategy tp+fsdp+sp\n")
+    out.append("(memory term excludes Pallas-flash-eliminated "
+               "attention-quadratic traffic; decode rows score bandwidth "
+               "fraction — see §Roofline)\n")
+    out.append(render_roofline_table(results, "pod16x16", "tp+fsdp+sp"))
+    out.append("\n\n### Strategy comparison — qwen1.5-0.5b train_4k "
+               "(§Perf B)\n")
+    out.append("| strategy | compute_s | memory_s | collective_s | "
+               "bound_s | frac | HBM GB |")
+    out.append("|---|---|---|---|---|---|---|")
+    for strat in ("tp+fsdp+sp", "dp_heavy", "dp_mod"):
+        key = f"qwen1.5-0.5b|train_4k|pod16x16|{strat}"
+        v = results.get(key)
+        if not v or v["status"] != "ok":
+            continue
+        t = row_terms(v)
+        out.append(
+            f"| {strat} | {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+            f"| {t['collective_s']:.3f} | {t['bound_step_s']:.3f} "
+            f"| {t['roofline_fraction'] * 100:.2f}% | {hbm_total_gb(v):.1f} |")
+    out.append("\n\n### Dry-run detail — both meshes, strategy tp+fsdp+sp\n")
+    out.append(render_dryrun_table(results, "tp+fsdp+sp"))
+    out.append("")
+    return _splice(md_path, "\n".join(out))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default=None,
+                    help="BENCH_*.json directory -> METG summary tables")
+    ap.add_argument("--dryrun-json", default=None,
+                    help="results/dryrun.json -> legacy roofline tables")
+    ap.add_argument("--out", default="EXPERIMENTS.md")
+    args = ap.parse_args(argv)
+    if not args.artifacts and not args.dryrun_json:
+        ap.error("nothing to do: pass --artifacts and/or --dryrun-json")
+    if args.artifacts:
+        print(f"tables appended: {append_metg_tables(args.artifacts, args.out)}")
+    if args.dryrun_json:
+        print(f"tables appended: "
+              f"{append_dryrun_tables(args.dryrun_json, args.out)}")
+
+
+if __name__ == "__main__":
+    main()

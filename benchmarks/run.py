@@ -34,6 +34,7 @@ the CI gate against ``benchmarks/baselines/`` is noise-free.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -73,10 +74,19 @@ def main(argv=None) -> None:
                          "against; exit nonzero on regression")
     ap.add_argument("--baseline-threshold", type=float, default=0.25,
                     help="relative slowdown tolerated by --baseline")
+    ap.add_argument("--tables", action="store_true",
+                    help="aggregate this run's BENCH_*.json artifacts into "
+                         "the paper-style METG summary table and append it "
+                         "to --tables-file (via append_tables.py)")
+    ap.add_argument("--tables-file", default="EXPERIMENTS.md",
+                    help="markdown file --tables appends to")
     args = ap.parse_args(argv)
     if args.baseline and not args.artifacts:
         ap.error("--baseline requires --artifacts (the current run's "
                  "artifacts are what gets compared)")
+    if args.tables and not args.artifacts:
+        ap.error("--tables requires --artifacts (the tables aggregate "
+                 "the written artifacts)")
     mods = args.only.split(",") if args.only else MODULES
     timer = None
     if args.timer == "synthetic":
@@ -103,6 +113,16 @@ def main(argv=None) -> None:
         print(f"{name}.elapsed,{(time.time() - t0) * 1e6:.0f},", flush=True)
     for path in ctx.written:
         print(f"artifact,0,{path}", flush=True)
+
+    if args.tables:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        if root not in sys.path:
+            sys.path.insert(0, root)
+        import append_tables
+
+        print(f"tables,0,"
+              f"{append_tables.append_metg_tables(args.artifacts, args.tables_file)}",
+              flush=True)
 
     regressed = False
     if args.baseline:

@@ -7,6 +7,7 @@
 | shardmap-csp      | MPI CSP (Listing 2)             | SPMD + messages | O(1) per step |
 | shardmap-pipeline | pipelined runtime (stage ring)  | SPMD + messages | O(1) per step |
 | host-dynamic      | Dask / Spark / Swift-T          | host per task   | O(1) per task |
+| pallas-fused      | (below the floor: megakernel)   | in-kernel grid  | O(1) per GRAPH|
 
 Every backend runs every graph (pattern x kernel x payload x imbalance)
 unchanged, and is validated against the numpy oracle in core.validate.
@@ -18,6 +19,7 @@ from .base import (Backend, StackedProgramBackend, backend_names,
 from .csp import CSPBackend, PlannedSPMDBackend
 from .dataflow import DataflowBackend
 from .host import HostBackend
+from .megakernel import MegakernelBackend
 from .pipeline import PipelineBackend
 from .scanvec import ScanBackend
 
@@ -30,6 +32,7 @@ __all__ = [
     "CSPBackend",
     "DataflowBackend",
     "HostBackend",
+    "MegakernelBackend",
     "PipelineBackend",
     "PlannedSPMDBackend",
     "ScanBackend",

@@ -8,6 +8,7 @@ workload and blocks until completion — the METG harness times that.
 from __future__ import annotations
 
 import ast
+import inspect
 import re
 from typing import Callable, Dict, List, Sequence, Tuple, Type
 
@@ -61,6 +62,11 @@ def parse_backend_spec(spec: str) -> Tuple[str, Dict[str, object]]:
             k, v = (s.strip() for s in part.split("=", 1))
             if not k:
                 raise ValueError(f"empty option name in backend spec {spec!r}")
+            if k in kwargs:
+                # a duplicate is always a typo'd spec — the last value
+                # silently winning would hide it
+                raise ValueError(
+                    f"duplicate option {k!r} in backend spec {spec!r}")
             if v.lower() in ("true", "false"):
                 # accept the JSON/YAML spellings too: a bare 'false'
                 # falling through to the string branch would be truthy
@@ -73,6 +79,33 @@ def parse_backend_spec(spec: str) -> Tuple[str, Dict[str, object]]:
     return name, kwargs
 
 
+def _check_ctor_kwargs(cls: Type["Backend"], name: str, kwargs: Dict) -> None:
+    """Reject unknown constructor options, naming backend and key.
+
+    A typo'd option (``sched=steal`` for ``schedule``) must fail loudly,
+    not no-op — and the raw ``TypeError`` from ``cls(**kwargs)`` would
+    name the class, not the backend the spec string asked for.
+    """
+    if not kwargs:
+        return
+    init = cls.__init__
+    known: List[str] = []
+    if init is not object.__init__:
+        params = inspect.signature(init).parameters
+        if any(p.kind is inspect.Parameter.VAR_KEYWORD
+               for p in params.values()):
+            return  # the constructor validates its own open kwargs
+        known = [n for n, p in params.items()
+                 if n != "self" and p.kind in (
+                     inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                     inspect.Parameter.KEYWORD_ONLY)]
+    for k in kwargs:
+        if k not in known:
+            raise ValueError(
+                f"backend {name!r} does not accept option {k!r}; "
+                f"known options: {known if known else 'none'}")
+
+
 def get_backend(name: str, **kwargs) -> "Backend":
     """Instantiate a backend from a name or spec string.
 
@@ -83,7 +116,10 @@ def get_backend(name: str, **kwargs) -> "Backend":
     base, spec_kw = parse_backend_spec(name)
     if base not in _BACKENDS:
         raise KeyError(f"unknown backend {base!r}; known: {backend_names()}")
-    return _BACKENDS[base](**{**spec_kw, **kwargs})
+    cls = _BACKENDS[base]
+    merged = {**spec_kw, **kwargs}
+    _check_ctor_kwargs(cls, base, merged)
+    return cls(**merged)
 
 
 class Backend:
@@ -106,6 +142,14 @@ class Backend:
     # communication ahead of the current kernel body (double buffering)
     sched_policy = "static"
     comm_overlap = False
+    # which dispatch-cost model this backend's execution implies:
+    # "per-task" — every task pays the runtime's dispatch overhead (the
+    # paper's model, and XLA's per-op reality); "per-launch" — one fixed
+    # launch cost for the whole graph batch (the fused megakernel).
+    # Resolved leniently by name (bench.timers.backend_dispatch_model),
+    # never by instantiation, so the default synthetic configuration
+    # stays backend-free.
+    dispatch_model = "per-task"
 
     def prepare(self, graphs: Sequence[TaskGraph]) -> Callable[[], List[np.ndarray]]:
         """Compile/stage the workload; returned callable blocks on finish."""
@@ -134,19 +178,31 @@ class Backend:
 class StackedProgramBackend(Backend):
     """Shared scaffolding for single-device whole-program backends.
 
-    Subclasses provide ``_compile(graphs) -> (compiled, *args)`` (one
-    program, per-graph outputs) and ``_compile_stacked(graphs) ->
-    (compiled, *args) | None`` (one program over a leading graph axis,
-    when the graphs can share a task body); everything else — runners,
-    the concurrent fallback, HLO exposure — lives here so the scan and
-    dataflow backends cannot drift apart.
+    Subclasses provide ``_build(graphs) -> (jitted_fn, *args)`` (one
+    program, per-graph outputs) and ``_build_stacked(graphs) ->
+    (jitted_fn, *args) | None`` (one program over a leading graph axis,
+    when the graphs can share a task body); everything else — AOT
+    compilation, runners, the concurrent fallback, HLO/StableHLO
+    exposure — lives here so the scan, dataflow and megakernel backends
+    cannot drift apart.
     """
 
-    def _compile(self, graphs: Sequence[TaskGraph]):
+    def _build(self, graphs: Sequence[TaskGraph]):
         raise NotImplementedError
 
-    def _compile_stacked(self, graphs: Sequence[TaskGraph]):
+    def _build_stacked(self, graphs: Sequence[TaskGraph]):
         return None  # no stacked form: prepare_many falls back to prepare
+
+    def _compile(self, graphs: Sequence[TaskGraph]):
+        fn, *args = self._build(graphs)
+        return (fn.lower(*args).compile(), *args)
+
+    def _compile_stacked(self, graphs: Sequence[TaskGraph]):
+        built = self._build_stacked(graphs)
+        if built is None:
+            return None
+        fn, *args = built
+        return (fn.lower(*args).compile(), *args)
 
     def prepare(self, graphs: Sequence[TaskGraph]):
         import jax
@@ -180,3 +236,23 @@ class StackedProgramBackend(Backend):
         if built is not None:
             return [built[0].as_text()]
         return [self._compile(graphs)[0].as_text()]
+
+    def lowered_stablehlo(self, graphs: Sequence[TaskGraph],
+                          platforms: Sequence[str] = ("tpu",)) -> str:
+        """Pre-optimization StableHLO of the concurrent program,
+        cross-lowered for ``platforms`` (no such hardware needed — jax
+        lowers for TPU on a CPU-only host).
+
+        Unlike ``lowered_hlo`` (optimized HLO of the program *compiled
+        for the host platform*), this exposes the structural form the
+        fusion tests count kernel launches in: ``tpu_custom_call`` sites
+        (one per Pallas launch) and ``stablehlo.while`` loops (one per
+        ``lax.scan`` dispatch loop).
+        """
+        graphs = list(graphs)
+        built = self._build_stacked(graphs)
+        if built is None:
+            built = self._build(graphs)
+        fn, *args = built
+        return fn.trace(*args).lower(
+            lowering_platforms=tuple(platforms)).as_text()

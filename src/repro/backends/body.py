@@ -13,7 +13,6 @@ folding, so the kernel loop is always executed at run time.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Sequence, Tuple
 
 import jax
@@ -21,10 +20,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.graph import CHECKSUM_MOD, TaskGraph
-from ..core.kernel_ref import COMPUTE_C, MEM_BIAS, MEM_SCALE, mxu_weight
-from ..core.kernel_spec import COMPUTE_TILE, MXU_DIM, KernelSpec
+from ..core.kernel_spec import KernelSpec
+from ..kernels import bodies
 
-_FOLD_BLOCK = 2.0**-46  # see module docstring
+_FOLD_BLOCK = bodies.FOLD_BLOCK  # see module docstring
 
 
 def checksum_vec(t, cols):
@@ -43,76 +42,20 @@ def combine_acc(dep_matrix, prev_combined):
     return (acc % jnp.uint32(CHECKSUM_MOD)).astype(jnp.uint32)
 
 
-def _looped(step_fn, state, iters_per_col, max_iters: int, dynamic: bool):
-    """Run the kernel loop.
-
-    Static mode: ``max_iters`` steps with a per-column mask (keep-old beyond
-    each column's count) — what vectorized runtimes must do, and why they
-    cannot exploit load imbalance (paper §V-G).
-    Dynamic mode: traced trip count (``while``-loop lowering) — per-task
-    systems (host dispatch, CSP with one column per rank) genuinely run
-    fewer iterations for short tasks.  Values are bitwise identical.
-    """
-    if dynamic:
-        trip = jnp.max(iters_per_col)
-        return jax.lax.fori_loop(0, trip, lambda k, st: step_fn(k, st), state)
-
-    def body(k, st):
-        new = step_fn(k, st)
-        keep = (k < iters_per_col)  # (W,)
-        keep = keep.reshape((-1,) + (1,) * (new.ndim - 1))
-        return jnp.where(keep, new, st)
-
-    return jax.lax.fori_loop(0, max_iters, body, state)
-
-
 def run_kernel_vec(kernel: KernelSpec, iters_per_col, acc, max_iters: int,
                    dynamic: bool = False):
-    """Vectorized kernel over width; returns (W,) f32 results."""
-    width = acc.shape[0]
+    """Vectorized kernel over width; returns (W,) f32 results.
+
+    Thin rank adapter over ``kernels.bodies.run_kernel_columns`` — the
+    megakernel backend and the standalone Pallas kernels call the same
+    step functions, so every execution layer shares one code path (the
+    reshapes here are exact; results stay bitwise identical).
+    """
     seed = acc.astype(jnp.float32) * jnp.float32(_FOLD_BLOCK)
-
-    if kernel.kind == "empty":
-        # No work; preserve the data dependency so scheduling is honest.
-        return seed * jnp.float32(0.0)
-
-    if kernel.kind == "compute":
-        tile = jnp.float32(0.5) + seed[:, None, None]
-        tile = jnp.broadcast_to(tile, (width,) + COMPUTE_TILE)
-        out = _looped(lambda k, a: a * a - COMPUTE_C, tile, iters_per_col,
-                      max_iters, dynamic)
-        return out[:, 0, 0]
-
-    if kernel.kind == "compute_mxu":
-        b = jnp.float32(0.25) + seed[:, None, None]
-        b = jnp.broadcast_to(b, (width, MXU_DIM, MXU_DIM))
-        w = jnp.asarray(mxu_weight())
-        inv = jnp.float32(1.0 / MXU_DIM)
-
-        def step(k, bb):
-            return jnp.einsum("wij,jk->wik", bb, w) * inv + bb * jnp.float32(0.5)
-
-        out = _looped(step, b, iters_per_col, max_iters, dynamic)
-        return out[:, 0, 0]
-
-    if kernel.kind == "memory":
-        span = max(1, kernel.span_bytes // 4)
-        size = max(span, kernel.scratch_bytes // 4)
-        size -= size % span
-        nwin = size // span
-        x = jnp.float32(1.0) + seed[:, None]
-        x = jnp.broadcast_to(x, (width, size))
-
-        def step(k, st):
-            wstart = (k % nwin) * span
-            window = jax.lax.dynamic_slice(st, (0, wstart), (width, span))
-            window = window * MEM_SCALE + MEM_BIAS
-            return jax.lax.dynamic_update_slice(st, window, (0, wstart))
-
-        out = _looped(step, x, iters_per_col, max_iters, dynamic)
-        return out[:, 0]
-
-    raise ValueError(kernel.kind)
+    out = bodies.run_kernel_columns(kernel, iters_per_col[:, None],
+                                    seed[:, None], max_iters,
+                                    dynamic=dynamic)
+    return out[:, 0]
 
 
 def make_payload(t, cols, base, combined, result, payload_elems: int):

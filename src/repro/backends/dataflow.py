@@ -25,7 +25,7 @@ class DataflowBackend(StackedProgramBackend):
     def __init__(self, donate: bool = True):
         self.donate = donate
 
-    def _compile(self, graphs: Sequence[TaskGraph]):
+    def _build(self, graphs: Sequence[TaskGraph]):
         statics = [body.graph_static_inputs(g) for g in graphs]
 
         def program(all_mats, all_iters):
@@ -37,13 +37,11 @@ class DataflowBackend(StackedProgramBackend):
                 outs.append(payload)
             return outs
 
-        fn = jax.jit(program)
         mats_in = [jnp.asarray(m) for m, _ in statics]
         iters_in = [jnp.asarray(i) for _, i in statics]
-        compiled = fn.lower(mats_in, iters_in).compile()
-        return compiled, mats_in, iters_in
+        return jax.jit(program), mats_in, iters_in
 
-    def _compile_stacked(self, graphs: Sequence[TaskGraph]):
+    def _build_stacked(self, graphs: Sequence[TaskGraph]):
         """Concurrent form: the unrolled schedule advances a stacked
         (graph, width) payload, so every timestep of every graph sits in one
         static program and XLA schedules them together.  None if the graphs
@@ -64,5 +62,4 @@ class DataflowBackend(StackedProgramBackend):
                 )(payload, mats_a[:, t], iters_a[:, t])
             return payload
 
-        compiled = jax.jit(program).lower(mats_in, iters_in).compile()
-        return compiled, mats_in, iters_in
+        return jax.jit(program), mats_in, iters_in

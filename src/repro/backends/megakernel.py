@@ -1,0 +1,226 @@
+"""Persistent Pallas megakernel backend: one launch per task-graph batch.
+
+Every other backend pays XLA's per-op dispatch on each timestep (a scan
+iteration, an unrolled op chain, a host call per task) — exactly the
+runtime overhead the paper identifies as the METG floor (§V-C: ~100 µs
+even for the best runtimes).  Follow-up Task Bench studies show the METG
+curve is *dominated* by this term, so the only way to move the curve is
+to remove dispatches, not tune them.
+
+This backend removes them: the whole task graph — all timesteps ×
+columns, dependencies included — lowers into a *single* Pallas kernel
+launch.
+
+* The grid is ``(graphs, timesteps)``; TPU grids execute sequentially,
+  so the trailing dimension is the timestep loop *inside* the kernel.
+* The output block is revisited on every timestep of a graph and acts as
+  the loop-carried payload wave: timestep ``t`` reads the block (the
+  ``t-1`` payloads), resolves dependencies, and overwrites it.
+* Dependencies are realized through that block — in-kernel VMEM reads
+  indexed by the graph's dense dependency table
+  (``TaskGraph.dependency_table``) — instead of XLA dataflow edges.
+* The task body is ``kernels.bodies.run_kernel_columns``, the same
+  traced code path the jitted backends execute, so conformance stays
+  bit-exact.
+
+Dispatch count per execution: 1 (vs H scan steps or H·W host calls).
+``tests/test_megakernel.py`` pins this structurally: the TPU lowering of
+the fused program contains exactly one kernel launch
+(``tpu_custom_call``) and no ``stablehlo.while``, while ``xla-scan``'s
+contains a while loop and no kernel launch.
+
+CPU CI runs the kernel in Pallas interpret mode (``interpret=None``
+auto-detects the platform); on TPU hosts Mosaic compiles the same kernel
+— all in-kernel arithmetic keeps to Mosaic-legal forms (column-vector
+shapes, int32 checksum math with the uint32 wrap-around base checksums
+precomputed host-side via ``TaskGraph.checksum_table``; see
+``kernels/bodies.py``).  The memory / compute_mxu task kernels are
+validated in interpret mode only.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..core.graph import CHECKSUM_MOD, TaskGraph
+from ..core.kernel_ref import mxu_weight
+from ..core.kernel_spec import MXU_DIM, KernelSpec
+from ..kernels import bodies
+from . import body
+from .base import StackedProgramBackend, register_backend
+
+
+def _fused_kernel(idx_ref, mask_ref, iters_ref, base_ref, *rest,
+                  kernel: KernelSpec, height: int, max_iters: int):
+    """One grid step = one timestep of one graph, all columns.
+
+    Refs (full-array blocks; G graphs share the leading table axis):
+      idx/mask:   (G*H, W, R) int32 — dependency table rows
+      iters:      (G*H, W, 1) int32 — per-task durations (imbalance)
+      base:       (G*H, W, 1) int32 — precomputed base checksums
+      [w]:        (MXU_DIM, MXU_DIM) f32 — only for the mxu kernel
+      out:        (W, P) f32 block at graph g — the payload wave
+    """
+    if kernel.kind == "compute_mxu":
+        w_ref, out_ref = rest
+        mxu_w = w_ref[...]
+    else:
+        (out_ref,) = rest
+        mxu_w = None
+    t = pl.program_id(1)  # trailing grid dim: sequential on TPU
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    prev = out_ref[...]  # (W, P): the t-1 payload wave (zeros at t=0)
+    width = prev.shape[0]
+    row = pl.program_id(0) * height + t
+    idx = idx_ref[row]    # (W, R)
+    mask = mask_ref[row]  # (W, R)
+
+    # dependency combine from the dense table: for each slot r, select
+    # dep r's combined checksum out of the previous wave.  Each (i, r)
+    # selects at most one column, so the f32 row-sum *is* that single
+    # value exactly (< 2^20) — no integer reduction (Mosaic lacks one).
+    prev_combined = jnp.transpose(prev[:, 3:4])  # (1, W)
+    jcols = jax.lax.broadcasted_iota(jnp.int32, (width, width), 1)
+    acc = jnp.zeros((width, 1), jnp.int32)
+    for r in range(idx.shape[1]):
+        sel = (idx[:, r:r + 1] == jcols) & (mask[:, r:r + 1] != 0)
+        contrib = jnp.where(
+            sel, jnp.broadcast_to(prev_combined, (width, width)),
+            jnp.float32(0.0))
+        picked = contrib.sum(axis=1, keepdims=True).astype(jnp.int32)
+        acc = (acc + picked) % CHECKSUM_MOD
+
+    base = base_ref[row]  # (W, 1)
+    combined = (base + acc) % CHECKSUM_MOD
+    iters = iters_ref[row]  # (W, 1)
+    seed = acc.astype(jnp.float32) * jnp.float32(bodies.FOLD_BLOCK)
+    res = bodies.run_kernel_columns(kernel, iters, seed, max_iters,
+                                    mxu_w=mxu_w)  # (W, 1)
+
+    tcol = jnp.zeros((width, 1), jnp.float32) + t.astype(jnp.float32)
+    cols = jax.lax.broadcasted_iota(jnp.float32, (width, 1), 0)
+    wave = jnp.concatenate(
+        [tcol, cols, base.astype(jnp.float32),
+         combined.astype(jnp.float32), res], axis=1)
+    payload_elems = prev.shape[1]
+    if payload_elems > 5:
+        ballast = jnp.broadcast_to(res, (width, payload_elems - 5))
+        wave = jnp.concatenate([wave, ballast], axis=1)
+    out_ref[...] = wave
+
+
+@register_backend("pallas-fused")
+class MegakernelBackend(StackedProgramBackend):
+    """Whole-graph fusion below the XLA dispatch floor."""
+
+    paradigm = "persistent fused kernel (single launch per graph batch)"
+    dispatch_model = "per-launch"
+
+    def __init__(self, interpret: Optional[bool] = None):
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = bool(interpret)
+
+    # -- table construction ------------------------------------------------
+    @staticmethod
+    def _tables(graphs: Sequence[TaskGraph], radix: int):
+        """Host-side static inputs, graphs concatenated on the row axis."""
+        idxs, masks, its, bases = [], [], [], []
+        for g in graphs:
+            idx, mask = g.dependency_table(radix)
+            _, iters = body.graph_static_inputs(g)
+            idxs.append(idx)
+            masks.append(mask.astype(np.int32))
+            its.append(iters[..., None])
+            bases.append(g.checksum_table().astype(np.int32)[..., None])
+        tabs = tuple(np.concatenate(x, axis=0)
+                     for x in (idxs, masks, its, bases))
+        if graphs[0].kernel.kind == "compute_mxu":
+            tabs += (mxu_weight().astype(np.float32),)
+        return tabs
+
+    @staticmethod
+    def _call(g0: TaskGraph, ngraphs: int, radix: int, interpret: bool):
+        """The single-launch pallas_call for ``ngraphs`` stacked graphs."""
+        W, H, P = g0.width, g0.height, g0.payload_elems
+        table = lambda g, t: (0, 0, 0)  # whole tables stay resident
+        in_specs = [
+            pl.BlockSpec((ngraphs * H, W, radix), table),
+            pl.BlockSpec((ngraphs * H, W, radix), table),
+            pl.BlockSpec((ngraphs * H, W, 1), table),
+            pl.BlockSpec((ngraphs * H, W, 1), table),
+        ]
+        if g0.kernel.kind == "compute_mxu":
+            in_specs.append(
+                pl.BlockSpec((MXU_DIM, MXU_DIM), lambda g, t: (0, 0)))
+        return pl.pallas_call(
+            functools.partial(_fused_kernel, kernel=g0.kernel, height=H,
+                              max_iters=g0.kernel.iterations),
+            grid=(ngraphs, H),
+            in_specs=in_specs,
+            # block index g, revisited for every t: the payload wave
+            out_specs=pl.BlockSpec((W, P), lambda g, t: (g, 0)),
+            out_shape=jax.ShapeDtypeStruct((ngraphs * W, P), jnp.float32),
+            interpret=interpret,
+        )
+
+    # -- programs ----------------------------------------------------------
+    def _program(self, graphs: List[TaskGraph], interpret: bool):
+        """Independent graphs: one jit program, one launch per graph."""
+        calls = [self._call(g, 1, max(1, g.max_radix()), interpret)
+                 for g in graphs]
+        args = [tuple(jnp.asarray(a)
+                      for a in self._tables([g], max(1, g.max_radix())))
+                for g in graphs]
+
+        def program(all_tabs):
+            return [call(*tabs) for call, tabs in zip(calls, all_tabs)]
+
+        return jax.jit(program), args
+
+    def _program_stacked(self, graphs: List[TaskGraph], interpret: bool):
+        """Concurrent graphs in ONE launch: the graph axis is the leading
+        grid dimension, so even multi-graph scenarios stay at dispatch
+        count 1 (vs one scan per graph elsewhere)."""
+        g0 = graphs[0]
+        radix = max(1, max(g.max_radix() for g in graphs))
+        call = self._call(g0, len(graphs), radix, interpret)
+        tabs = tuple(jnp.asarray(a) for a in self._tables(graphs, radix))
+
+        def program(*tabs_a):
+            out = call(*tabs_a)  # (G*W, P)
+            return out.reshape(len(graphs), g0.width, g0.payload_elems)
+
+        return (jax.jit(program),) + tabs
+
+    # -- StackedProgramBackend hooks --------------------------------------
+    def _build(self, graphs: Sequence[TaskGraph]):
+        return self._program(list(graphs), self.interpret)
+
+    def _build_stacked(self, graphs: Sequence[TaskGraph]):
+        if not body.stackable(graphs):
+            return None
+        return self._program_stacked(list(graphs), self.interpret)
+
+    def lowered_stablehlo(self, graphs: Sequence[TaskGraph],
+                          platforms: Sequence[str] = ("tpu",)) -> str:
+        """Always lowers the real (non-interpret) kernel: the launch
+        count being pinned is a property of the Mosaic program, not of
+        the CPU-CI interpret fallback."""
+        graphs = list(graphs)
+        if body.stackable(graphs):
+            built = self._program_stacked(graphs, False)
+        else:
+            built = self._program(graphs, False)
+        fn, *args = built
+        return fn.trace(*args).lower(
+            lowering_platforms=tuple(platforms)).as_text()

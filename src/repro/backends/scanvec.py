@@ -22,7 +22,7 @@ from .base import StackedProgramBackend, register_backend
 class ScanBackend(StackedProgramBackend):
     paradigm = "compiled timestep loop (OpenMP-forall analogue)"
 
-    def _compile(self, graphs: Sequence[TaskGraph]):
+    def _build(self, graphs: Sequence[TaskGraph]):
         """One program scanning each graph in turn (independent execution)."""
         statics = [body.graph_static_inputs(g) for g in graphs]
 
@@ -41,13 +41,11 @@ class ScanBackend(StackedProgramBackend):
                 outs.append(final)
             return outs
 
-        fn = jax.jit(program)
         mats_in = [jnp.asarray(m) for m, _ in statics]
         iters_in = [jnp.asarray(i) for _, i in statics]
-        compiled = fn.lower(mats_in, iters_in).compile()
-        return compiled, mats_in, iters_in
+        return jax.jit(program), mats_in, iters_in
 
-    def _compile_stacked(self, graphs: Sequence[TaskGraph]):
+    def _build_stacked(self, graphs: Sequence[TaskGraph]):
         """One scan over a stacked (graph, width) payload — the concurrent
         form: all graphs advance in the same compiled timestep (multi-graph
         scenarios, paper Fig 9d).  None if the graphs cannot share a body."""
@@ -73,5 +71,4 @@ class ScanBackend(StackedProgramBackend):
             final, _ = jax.lax.scan(step, init, (ts, mats_a, iters_a))
             return final
 
-        compiled = jax.jit(program).lower(mats_t, iters_t).compile()
-        return compiled, mats_t, iters_t
+        return jax.jit(program), mats_t, iters_t

@@ -66,6 +66,27 @@ def cached_backend(cache: Dict[str, object], backend_name: str):
     return cache[backend_name]
 
 
+def backend_dispatch_model(backend_name: str) -> str:
+    """Which dispatch-cost model a backend's execution implies.
+
+    Resolved *leniently* from the registered class's ``dispatch_model``
+    attribute — by name only, never by instantiation, and unknown or
+    malformed names fall back to ``"per-task"`` — so the default
+    synthetic configuration stays backend-free (the model tests feed it
+    nonexistent backend names on purpose).
+    """
+    try:
+        from ..backends.base import _BACKENDS, parse_backend_spec
+
+        base, _ = parse_backend_spec(backend_name)
+        cls = _BACKENDS.get(base)
+    except Exception:
+        return "per-task"
+    if cls is None:
+        return "per-task"
+    return getattr(cls, "dispatch_model", "per-task")
+
+
 def pick_sample(samples: Sequence[float], percentile: float) -> float:
     """Select the reported time: <=0 -> min (best-of-N), else percentile."""
     if not samples:
@@ -132,6 +153,17 @@ class SyntheticTimer:
         (``comm_overlap``) hide it behind compute — ``max(compute,
         comm)`` — while blocking backends pay ``compute + comm`` — the
         paper's §V-F communication-hiding axis.
+
+    Backends whose class declares ``dispatch_model = "per-launch"`` (the
+    fused megakernel) are charged a *per-launch* model instead: one
+    ``overhead_per_launch`` for the whole batch plus a small in-kernel
+    ``fused_overhead_per_task`` (grid-step + table-indexing cost) per
+    task, and no per-message comm term (dependencies are VMEM reads
+    inside the launch).  Resolution is by name only
+    (``backend_dispatch_model``) — no instantiation — so the default
+    path still never touches a backend.  With the default constants the
+    fused METG floor sits ~50x below the per-task floor, which is the
+    undercut the committed ``BENCH_metg.pallas-fused.*`` baselines pin.
     """
 
     overhead_per_task: float = 20e-6
@@ -139,6 +171,8 @@ class SyntheticTimer:
     seconds_per_dependency: float = 0.0
     seconds_per_byte: float = 0.0
     workers: int = 1
+    overhead_per_launch: float = 100e-6
+    fused_overhead_per_task: float = 400e-9
     name: str = field(default="synthetic", init=False)
     _backends: Dict[str, object] = field(default_factory=dict, repr=False)
 
@@ -165,6 +199,13 @@ class SyntheticTimer:
         return int(g.dependence_matrices().sum()) * per_dep
 
     def measure(self, backend_name: str, graphs: Sequence[TaskGraph]) -> float:
+        if backend_dispatch_model(backend_name) == "per-launch":
+            # one launch for the whole batch (the stacked grid covers all
+            # graphs); dependencies are in-kernel refs, so no comm term
+            return self.overhead_per_launch + sum(
+                g.num_tasks * self.fused_overhead_per_task
+                + g.total_iterations() * self.seconds_per_iteration
+                for g in graphs)
         policy, overlap, workers = "serial", False, self.workers
         if self.workers > 1 or self.seconds_per_byte > 0:
             be = cached_backend(self._backends, backend_name)

@@ -91,6 +91,39 @@ class TaskGraph:
             object.__setattr__(self, "_mats_cache", cached)
         return cached
 
+    def dependency_table(self, radix: Optional[int] = None):
+        """Dense device-resident dependence form: padded index + mask.
+
+        Returns ``(idx, mask)`` of shape ``(height, width, R)`` with
+        ``R = max(1, max_radix())`` (or the requested ``radix >= R`` when
+        stacking graphs of different patterns into one program): row
+        ``(t, i)`` lists ``deps(t, i)`` in sorted column order, padded
+        with column 0 under mask 0 — the ragged-padding idiom of
+        ``dist.collectives``.  ``idx`` is int32, ``mask`` uint8; both
+        read-only and cached on the (frozen) graph.  The megakernel
+        backend indexes these in-kernel instead of consuming Python-side
+        dependency lists or the dense (W, W) matrices.
+        """
+        cached = self.__dict__.get("_deptab_cache")
+        if cached is None:
+            r0 = max(1, self.max_radix())
+            rows = [self._pat.index_table(t, self.width, r0)
+                    for t in range(self.height)]
+            idx = np.stack([r[0] for r in rows])
+            mask = np.stack([r[1] for r in rows])
+            idx.setflags(write=False)
+            mask.setflags(write=False)
+            cached = (idx, mask)
+            object.__setattr__(self, "_deptab_cache", cached)
+        idx, mask = cached
+        r0 = idx.shape[2]
+        if radix is None or radix == r0:
+            return idx, mask
+        if radix < r0:
+            raise ValueError(f"requested radix {radix} < max radix {r0}")
+        pad = ((0, 0), (0, 0), (0, radix - r0))
+        return np.pad(idx, pad), np.pad(mask, pad)
+
     def is_time_invariant(self) -> bool:
         cached = self.__dict__.get("_invariant_cache")
         if cached is None:
@@ -130,6 +163,24 @@ class TaskGraph:
         in jnp.uint32 (backends) and in float32 payload slots (< 2^20).
         """
         return ((t * 2654435761 + i * 40503) % (1 << 32)) % CHECKSUM_MOD
+
+    def checksum_table(self) -> np.ndarray:
+        """All base checksums at once: uint32 ``(height, width)``.
+
+        The megakernel precomputes these host-side — the wrap-around
+        multiply needs uint32 arithmetic Mosaic cannot lower, while the
+        values themselves (< 2^20) are exact in the kernel's int32 math.
+        Cached read-only on the (frozen) graph.
+        """
+        cached = self.__dict__.get("_cktab_cache")
+        if cached is None:
+            t = np.arange(self.height, dtype=np.uint64)[:, None]
+            i = np.arange(self.width, dtype=np.uint64)[None, :]
+            cached = (((t * 2654435761 + i * 40503) % (1 << 32))
+                      % CHECKSUM_MOD).astype(np.uint32)
+            cached.setflags(write=False)
+            object.__setattr__(self, "_cktab_cache", cached)
+        return cached
 
     def execute_point(
         self, t: int, i: int, inputs: Sequence[np.ndarray]

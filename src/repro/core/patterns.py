@@ -92,6 +92,27 @@ class PatternInstance:
             r = max(r, int(m.sum(axis=1).max(initial=0)))
         return r
 
+    def index_table(self, t: int, width: int, radix: int):
+        """Dense padded form of one timestep's dependence rows.
+
+        Returns ``(idx, mask)`` of shape ``(width, radix)``: row ``i``
+        holds ``deps(t, i)`` in sorted column order, padded with column 0
+        under mask 0 (the ragged-padding idiom of ``dist.collectives``).
+        ``idx`` is int32, ``mask`` uint8 — the device-resident form the
+        megakernel indexes instead of Python-side dependency lists.
+        """
+        idx = np.zeros((width, radix), np.int32)
+        mask = np.zeros((width, radix), np.uint8)
+        for i in range(width):
+            ds = self.deps(t, i, width)
+            if len(ds) > radix:
+                raise ValueError(
+                    f"pattern {self.name!r} has {len(ds)} deps at "
+                    f"({t},{i}) but the table radix is {radix}")
+            idx[i, : len(ds)] = ds
+            mask[i, : len(ds)] = 1
+        return idx, mask
+
 
 @register("trivial")
 class Trivial(DependencePattern):

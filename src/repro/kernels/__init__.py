@@ -1,18 +1,21 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
+- bodies: composable in-kernel task bodies (step functions + masked loop)
+  shared by the jitted backends, these kernels, and the fused megakernel
 - compute/memory: the paper's two task kernels, TPU-tiled
 - flash_attention: fused online-softmax attention (causal/SWA/GQA)
 - ssd: Mamba-2 state-space-duality chunked kernel
 - ops: jit'd dispatchers (pallas | interpret | ref)
 - ref: pure-jnp oracles for every kernel
 """
-from . import ops, ref
+from . import bodies, ops, ref
 from .compute import taskbench_compute
 from .flash_attention import flash_attention
 from .memory import taskbench_memory
 from .ssd import ssd_chunked
 
 __all__ = [
+    "bodies",
     "ops",
     "ref",
     "taskbench_compute",

@@ -16,20 +16,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..core.kernel_ref import COMPUTE_C
 from ..core.kernel_spec import COMPUTE_TILE
+from .bodies import compute_step, masked_loop
 
 
 def _compute_kernel(iters_ref, tiles_ref, out_ref, *, max_iters: int):
     tiles = tiles_ref[...]  # (Wb, 8, 128) f32, VMEM
     iters = iters_ref[...]  # (Wb,) int32
-
-    def step(k, a):
-        new = a * a - COMPUTE_C
-        keep = (k < iters)[:, None, None]
-        return jnp.where(keep, new, a)
-
-    out_ref[...] = jax.lax.fori_loop(0, max_iters, step, tiles)
+    out_ref[...] = masked_loop(lambda k, a: compute_step(a), tiles, iters,
+                               max_iters)
 
 
 def taskbench_compute(

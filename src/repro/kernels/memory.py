@@ -20,18 +20,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..core.kernel_ref import MEM_BIAS, MEM_SCALE
+from .bodies import memory_step
 
 
 def _memory_kernel(x_ref, o_ref, *, reps_base: int, reps_rem: int):
     w = pl.program_id(0)
     reps = reps_base + (w < reps_rem).astype(jnp.int32)
     win = x_ref[...]
-
-    def step(_, a):
-        return a * MEM_SCALE + MEM_BIAS
-
-    o_ref[...] = jax.lax.fori_loop(0, reps, step, win)
+    o_ref[...] = jax.lax.fori_loop(0, reps, lambda _, a: memory_step(a), win)
 
 
 def taskbench_memory(

@@ -107,6 +107,36 @@ def test_backend_spec_strings():
         get_backend("host-dynamic", schedule="nope")
 
 
+def test_backend_spec_rejects_duplicate_keys():
+    """A spec that sets the same option twice is a typo'd scenario, not a
+    last-wins preference — the error names the key and the full spec."""
+    from repro.backends.base import parse_backend_spec
+
+    with pytest.raises(ValueError, match=r"duplicate option 'workers'"):
+        parse_backend_spec("host-dynamic[workers=2,workers=4]")
+    with pytest.raises(ValueError, match=r"host-dynamic\[schedule=steal"):
+        get_backend("host-dynamic[schedule=steal,schedule=static]")
+
+
+def test_backend_spec_rejects_unknown_ctor_options():
+    """Options the constructor doesn't accept fail loudly, naming the
+    backend and the option (silently-ignored typos poison sweeps)."""
+    with pytest.raises(ValueError, match=r"'host-dynamic'.*'workres'"):
+        get_backend("host-dynamic[workres=2]")
+    # the error enumerates the legal options to fix the typo against
+    with pytest.raises(ValueError, match="schedule"):
+        get_backend("host-dynamic[workres=2]")
+    # ...and says so when the backend takes none at all
+    with pytest.raises(ValueError, match="known options: none"):
+        get_backend("xla-scan[bogus=1]")
+    # explicit kwargs go through the same validation as spec strings
+    with pytest.raises(ValueError, match=r"'xla-scan'.*'bogus'"):
+        get_backend("xla-scan", bogus=1)
+    # legal options still pass on every constructor shape
+    assert get_backend("pallas-fused[interpret=True]").interpret is True
+    assert get_backend("host-dynamic[workers=3]").workers == 3
+
+
 def test_validation_catches_corruption():
     g = make_graph(width=4, height=6, pattern="stencil", iterations=3)
     out = get_backend("xla-scan").run([g])[0].copy()

@@ -825,6 +825,46 @@ def test_benchmarks_smoke_emits_valid_artifacts(tmp_path, capsys):
         assert doc["scenario"]["sweep"]["smoke"] is True
 
 
+def test_tables_flag_round_trips_metg_summary(tmp_path, capsys):
+    """`--tables` turns the run's own artifacts into the paper-style METG
+    summary: sweep -> BENCH_*.json -> append_tables -> markdown table
+    with one row per backend (pallas-fused included) under the marker."""
+    from benchmarks.run import main
+
+    md = tmp_path / "EXP.md"
+    main(["--smoke", "--timer", "synthetic",
+          "--only", "bench_metg_patterns",
+          "--artifacts", str(tmp_path), "--tables",
+          "--tables-file", str(md)])
+    assert f"tables,0,{md}" in capsys.readouterr().out
+    text = md.read_text()
+    assert "## §Tables (generated)" in text
+    assert "METG(50%)" in text
+    assert "| pallas-fused |" in text and "| xla-scan |" in text
+    # regenerating replaces the generated section instead of stacking it
+    import append_tables
+
+    append_tables.append_metg_tables(str(tmp_path), str(md))
+    assert md.read_text().count("## §Tables (generated)") == 1
+
+
+def test_append_metg_tables_over_committed_baselines(tmp_path):
+    """The committed benchmarks/baselines directory renders directly —
+    fused rows carry numeric µs cells strictly below xla-scan's."""
+    import append_tables
+
+    baselines = os.path.join(os.path.dirname(__file__), "..",
+                             "benchmarks", "baselines")
+    md = tmp_path / "EXP.md"
+    append_tables.append_metg_tables(baselines, str(md))
+    table = md.read_text()
+    fused = [l for l in table.splitlines()
+             if l.startswith("| pallas-fused |")]
+    assert fused, "no pallas-fused rows rendered"
+    with pytest.raises(ValueError, match="no valid BENCH"):
+        append_tables.append_metg_tables(str(tmp_path / "empty"), str(md))
+
+
 def test_bench_context_threads_smoke_and_artifacts(tmp_path):
     from benchmarks.common import BenchContext, metg_for
 
