@@ -53,6 +53,8 @@ def render_metg_summary(docs: List[Dict]) -> str:
     the floor sits above the whole sweep)."""
     families: Dict[str, Dict] = defaultdict(dict)
     for doc in docs:
+        if doc.get("kind") != "metg_sweep":
+            continue  # serve_load docs render via render_serve_summary
         sc = doc["scenario"]
         families[sc["name"].split(".")[0]][(sc["backend"],
                                            _case_name(sc))] = doc
@@ -80,6 +82,38 @@ def render_metg_summary(docs: List[Dict]) -> str:
     return "\n".join(out)
 
 
+def render_serve_summary(docs: List[Dict]) -> str:
+    """Markdown serve_load table: decode mode x arrival rate, percentile
+    latencies + decode throughput + host syncs per token (empty string
+    when no serve_load artifacts are present)."""
+    cells = {}
+    for doc in docs:
+        if doc.get("kind") != "serve_load":
+            continue
+        sc = doc["scenario"]
+        cells[(sc["mode"], float(sc["rate_rps"]))] = doc
+    if not cells:
+        return ""
+    out = [
+        "\n### serve_load — open-loop serving latency "
+        "(host per-token loop vs on-device chunked decode)\n",
+        "| mode | rate (req/s) | TTFT p50/p95 (ms) | TPOT p50/p95 (µs) "
+        "| thr (tok/s) | goodput (req/s) | syncs/token |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for (mode, rate) in sorted(cells, key=lambda k: (k[0], k[1])):
+        m = cells[(mode, rate)]["metrics"]
+        out.append(
+            f"| {mode} | {rate:g} "
+            f"| {m['ttft_s']['p50'] * 1e3:.3f}/{m['ttft_s']['p95'] * 1e3:.3f} "
+            f"| {m['tpot_s']['p50'] * 1e6:.1f}/{m['tpot_s']['p95'] * 1e6:.1f} "
+            f"| {m['throughput_tok_s']:.0f} "
+            f"| {m['goodput_rps']:.0f} "
+            f"| {m['host_syncs_per_token']:.3f} |")
+    out.append("")
+    return "\n".join(out)
+
+
 def _splice(md_path: str, body: str) -> str:
     """Replace everything after the marker with ``body`` (creating the
     file, or the marker section, when missing)."""
@@ -103,7 +137,9 @@ def append_metg_tables(artifacts_dir: str,
     if not docs:
         raise ValueError(
             f"no valid BENCH_*.json artifacts in {artifacts_dir!r}")
-    return _splice(md_path, render_metg_summary(docs) + "\n")
+    return _splice(md_path,
+                   render_metg_summary(docs) + render_serve_summary(docs)
+                   + "\n")
 
 
 def append_dryrun_tables(dryrun_json: str = "results/dryrun.json",

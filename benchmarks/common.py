@@ -68,6 +68,28 @@ class BenchContext:
             self.written.append(write_bench_json(result, self.artifacts_dir))
         return result
 
+    def run_serve(self, spec, **kw):
+        """Measure one serve_load cell (smoke applied), record its artifact.
+
+        Dispatches on the context timer: None/wallclock drives the real
+        ``ServeEngine``; the synthetic fake clock runs the deterministic
+        discrete-event cost model (the CI-gated baseline path).  ``kw``
+        forwards to ``run_serve_load`` (e.g. ``cost=ServeCostParams(...)``).
+        """
+        from repro.bench.serve import run_serve_load, write_serve_json
+
+        spec = spec.resolved(self.smoke or spec.smoke)
+        if self.artifacts_dir:
+            path = artifact_path(spec.slug, self.artifacts_dir)
+            if path in self.written:
+                raise ValueError(
+                    f"scenario {spec.name!r} would overwrite an earlier "
+                    f"artifact at {path}; pick names with distinct slugs")
+        result = run_serve_load(spec, timer=self.timer, **kw)
+        if self.artifacts_dir:
+            self.written.append(write_serve_json(result, self.artifacts_dir))
+        return result
+
 
 def metg_for(
     ctx: BenchContext,

@@ -19,6 +19,10 @@ the paper:
                          comm_overlap on/off (overlap-efficiency curve)
   bench_metg_imbalance   §V-G study: imbalance mitigation — work stealing
                          vs static schedule (mitigation-factor curve)
+  bench_serve_load       serving under open-loop load: host-loop vs
+                         chunked decode, TTFT/TPOT/goodput percentiles
+                         (real engine on wallclock, deterministic cost
+                         model on --timer synthetic)
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One:     ``PYTHONPATH=src python -m benchmarks.run --only bench_metg_deps``
@@ -50,6 +54,7 @@ MODULES = [
     "bench_moe_dispatch",
     "bench_metg_payload",
     "bench_metg_imbalance",
+    "bench_serve_load",
 ]
 
 

@@ -16,6 +16,10 @@
                  mitigation factor)
 - ``moe``      — the ``moe_dispatch`` comm-volume scenario (SP-aware EP
                  vs token replication, dry-run roofline)
+- ``serve``    — the ``serve_load`` scenario family: deterministic
+                 open-loop serving traces against the continuous-batching
+                 engine (real wall clock) or its discrete-event cost
+                 model (synthetic), TTFT/TPOT/goodput percentiles
 
 ``benchmarks/*.py`` are thin wrappers over this package; multi-graph
 scenarios (``ngraphs >= 2``) execute concurrently through
@@ -42,6 +46,10 @@ from .studies import (StudyPoint, elapsed_s, imbalance_spec,
                       study_timer)
 from .moe import (MoEDispatchSpec, analytic_a2a_bytes, lowered_moe_hlo,
                   moe_dispatch_report)
+from .serve import (ServeCostParams, ServeLoadResult, ServeLoadSpec,
+                    TracedRequest, run_engine_load, run_serve_load,
+                    serve_artifact, simulate_serve_load, synth_trace,
+                    write_serve_json)
 
 __all__ = [
     "METGResult",
@@ -87,4 +95,14 @@ __all__ = [
     "analytic_a2a_bytes",
     "lowered_moe_hlo",
     "moe_dispatch_report",
+    "ServeCostParams",
+    "ServeLoadResult",
+    "ServeLoadSpec",
+    "TracedRequest",
+    "run_engine_load",
+    "run_serve_load",
+    "serve_artifact",
+    "simulate_serve_load",
+    "synth_trace",
+    "write_serve_json",
 ]

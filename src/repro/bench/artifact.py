@@ -41,6 +41,37 @@ _SCENARIO_FIELDS = {
     "sweep": dict,
 }
 
+# --- kind="serve_load" (repro.bench.serve): open-loop serving traces ---
+_SERVE_SCENARIO_FIELDS = {
+    "name": str,
+    "mode": str,
+    "rate_rps": (int, float),
+    "num_requests": int,
+    "batch_slots": int,
+    "chunk_size": int,
+    "max_len": int,
+    "prompt_len_lo": int,
+    "prompt_len_hi": int,
+    "out_tokens_lo": int,
+    "out_tokens_hi": int,
+    "seed": int,
+    "model": str,
+}
+_SERVE_PCT_KEYS = ("p50", "p95", "p99", "mean")
+_SERVE_PCT_METRICS = ("ttft_s", "tpot_s", "latency_s")
+_SERVE_SCALAR_METRICS = {
+    "throughput_tok_s": (int, float),
+    "goodput_rps": (int, float),
+    "makespan_s": (int, float),
+    "host_syncs_per_token": (int, float),
+    "host_syncs": int,
+    "decode_steps": int,
+    "chunk_launches": int,
+    "prefills": int,
+    "tokens_generated": int,
+    "completed": int,
+}
+
 
 def bench_artifact(result: ScenarioResult) -> Dict:
     """The JSON-serializable artifact for one scenario result."""
@@ -104,12 +135,15 @@ def validate_artifact(doc: Dict) -> Dict:
     need(isinstance(doc, dict), "not an object")
     need(doc.get("schema") == SCHEMA_VERSION,
          f"schema must be {SCHEMA_VERSION}, got {doc.get('schema')!r}")
-    need(doc.get("kind") == "metg_sweep", f"unknown kind {doc.get('kind')!r}")
+    need(doc.get("kind") in ("metg_sweep", "serve_load"),
+         f"unknown kind {doc.get('kind')!r}")
     # any non-empty name is valid: Timer is an open protocol (custom
     # timers must not be rejected at the artifact layer)
     need(isinstance(doc.get("timer"), str) and doc.get("timer"),
          f"timer must be a non-empty string, got {doc.get('timer')!r}")
     need(isinstance(doc.get("timer_config"), dict), "timer_config")
+    if doc["kind"] == "serve_load":
+        return _validate_serve_load(doc, need)
     need(_typed(doc.get("threshold"), (int, float)), "threshold")
     need(_typed(doc.get("peak_rate"), (int, float)), "peak_rate")
     need("metg_s" in doc, "metg_s missing (null means no crossing)")
@@ -134,22 +168,53 @@ def validate_artifact(doc: Dict) -> Dict:
     return doc
 
 
+def _validate_serve_load(doc: Dict, need) -> Dict:
+    """Schema for ``kind="serve_load"`` (see ``repro.bench.serve``)."""
+    sc = doc.get("scenario")
+    need(isinstance(sc, dict), "scenario missing")
+    for k, t in _SERVE_SCENARIO_FIELDS.items():
+        if t is str:
+            need(isinstance(sc.get(k), str) and sc.get(k),
+                 f"scenario.{k} must be a non-empty string")
+        else:
+            need(_typed(sc.get(k), t), f"scenario.{k} must be {t}")
+    need(sc["mode"] in ("chunked", "host"),
+         f"scenario.mode must be chunked|host, got {sc['mode']!r}")
+    need(isinstance(sc.get("smoke"), bool), "scenario.smoke must be a bool")
+    m = doc.get("metrics")
+    need(isinstance(m, dict), "metrics missing")
+    for k in _SERVE_PCT_METRICS:
+        p = m.get(k)
+        need(isinstance(p, dict), f"metrics.{k} must be an object")
+        for q in _SERVE_PCT_KEYS:
+            need(_typed(p.get(q), (int, float)),
+                 f"metrics.{k}.{q} must be a number")
+    for k, t in _SERVE_SCALAR_METRICS.items():
+        need(_typed(m.get(k), t), f"metrics.{k} must be {t}")
+    return doc
+
+
 def artifact_path(slug: str, outdir: str) -> str:
     """Where ``write_bench_json`` will put a scenario's artifact."""
     return os.path.join(outdir, f"BENCH_{slug}.json")
 
 
-def write_bench_json(result: ScenarioResult, outdir: str) -> str:
-    """Write ``BENCH_<scenario>.json`` (validated); returns the path."""
-    doc = validate_artifact(bench_artifact(result))
+def write_artifact_doc(doc: Dict, slug: str, outdir: str) -> str:
+    """Write a validated artifact document atomically; returns the path."""
     os.makedirs(outdir, exist_ok=True)
-    path = artifact_path(result.spec.slug, outdir)
+    path = artifact_path(slug, outdir)
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
         f.write("\n")
     os.replace(tmp, path)
     return path
+
+
+def write_bench_json(result: ScenarioResult, outdir: str) -> str:
+    """Write ``BENCH_<scenario>.json`` (validated); returns the path."""
+    doc = validate_artifact(bench_artifact(result))
+    return write_artifact_doc(doc, result.spec.slug, outdir)
 
 
 def read_bench_json(path: str) -> Dict:

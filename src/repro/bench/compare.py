@@ -57,6 +57,7 @@ class ComparisonResult:
     metg_rel_delta: Optional[float] = None
     points: List[PointDelta] = field(default_factory=list)
     regressions: List[str] = field(default_factory=list)
+    note: str = ""  # headline movement for non-METG kinds (serve_load)
 
     @property
     def ok(self) -> bool:
@@ -64,10 +65,41 @@ class ComparisonResult:
 
     def summary(self) -> str:
         if self.ok:
+            if self.note:
+                return f"{self.scenario}: ok ({self.note})"
             d = self.metg_rel_delta
             moved = f"metg{d:+.1%}" if d is not None else "no-metg"
             return f"{self.scenario}: ok ({moved})"
         return f"{self.scenario}: REGRESSION " + "; ".join(self.regressions)
+
+
+# metrics where LOWER is better: any increase beyond threshold regresses
+_SERVE_LATENCY_METRICS = ("ttft_s", "tpot_s", "latency_s")
+# metrics where HIGHER is better: any drop beyond threshold regresses
+_SERVE_RATE_METRICS = ("throughput_tok_s", "goodput_rps")
+_SERVE_IDENTITY = ("name", "mode", "rate_rps", "num_requests", "batch_slots",
+                   "chunk_size", "seed", "model")
+
+
+def _compare_serve(baseline: Dict, current: Dict, rel_threshold: float,
+                   res: ComparisonResult) -> ComparisonResult:
+    """serve_load diff: latency percentiles up or rates down = regression."""
+    bm, cm = baseline["metrics"], current["metrics"]
+    for k in _SERVE_RATE_METRICS:
+        rel = _rel_delta(bm[k], cm[k])  # negative = slower
+        if -rel > rel_threshold:
+            res.regressions.append(
+                f"{k} {bm[k]:.4g} -> {cm[k]:.4g} "
+                f"({rel:+.1%} < -{rel_threshold:.0%})")
+    for k in _SERVE_LATENCY_METRICS:
+        for q in ("p50", "p95", "p99"):
+            rel = _rel_delta(bm[k][q], cm[k][q])
+            if rel > rel_threshold:
+                res.regressions.append(
+                    f"{k}.{q} {bm[k][q]:.3e}s -> {cm[k][q]:.3e}s "
+                    f"(+{rel:.1%} > {rel_threshold:.0%})")
+    res.note = f"thr{_rel_delta(bm['throughput_tok_s'], cm['throughput_tok_s']):+.1%}"
+    return res
 
 
 def compare_artifacts(baseline: Dict, current: Dict,
@@ -78,6 +110,27 @@ def compare_artifacts(baseline: Dict, current: Dict,
         raise ValueError(f"rel_threshold must be > 0, got {rel_threshold}")
     name = baseline["scenario"]["name"]
     res = ComparisonResult(scenario=name)
+    bk = baseline.get("kind", "metg_sweep")
+    ck = current.get("kind", "metg_sweep")
+    if bk != ck:
+        res.regressions.append(
+            f"kind changed: baseline {bk!r} vs current {ck!r} "
+            f"(artifacts are not comparable)")
+        return res
+    if bk == "serve_load":
+        for key in _SERVE_IDENTITY:
+            b, c = baseline["scenario"][key], current["scenario"][key]
+            if b != c:
+                res.regressions.append(
+                    f"scenario.{key} changed: baseline {b!r} vs current {c!r}")
+        bt, ct = baseline["timer"], current["timer"]
+        if bt != ct:
+            res.regressions.append(
+                f"timer changed: baseline {bt!r} vs current {ct!r} "
+                f"(times are not comparable)")
+        if res.regressions:
+            return res
+        return _compare_serve(baseline, current, rel_threshold, res)
     for key in ("name", "backend", "pattern", "kernel"):
         b, c = baseline["scenario"][key], current["scenario"][key]
         if b != c:

@@ -48,8 +48,8 @@ def attention_ref(
     v: jax.Array,  # (B, Skv, Hkv, D)
     causal: bool = True,
     window: Optional[int] = None,  # sliding window size (None = full)
-    q_offset=0,  # absolute position of q[0]; int or traced scalar
-    kv_positions: Optional[jax.Array] = None,  # (Skv,) absolute key positions
+    q_offset=0,  # absolute position of q[0]; int, traced scalar, or (B,)
+    kv_positions: Optional[jax.Array] = None,  # (Skv,) or (B, Skv) positions
     scale: Optional[float] = None,
 ) -> jax.Array:
     """Grouped-query softmax attention oracle, fp32 accumulation.
@@ -57,6 +57,11 @@ def attention_ref(
     ``window=w`` allows key j for query i iff i - w < j <= i (Mistral SWA).
     ``kv_positions`` supports ring-buffer caches: keys carry arbitrary
     absolute positions; negative positions are treated as invalid slots.
+
+    Both ``q_offset`` and ``kv_positions`` accept a leading batch dim —
+    the serving engine's slot-granular decode runs every batch slot at its
+    own depth, and left-padded wave prefills give each slot its own start
+    offset (pad keys land at negative positions and are masked out).
     """
     B, Sq, Hq, D = q.shape
     _, Skv, Hkv, _ = k.shape
@@ -65,16 +70,21 @@ def attention_ref(
     scale = scale if scale is not None else 1.0 / np.sqrt(D)
 
     qs = q * jnp.asarray(scale, q.dtype)
-    qpos = jnp.arange(Sq)[:, None] + q_offset
+    # mask is (Bm, Sq, Skv) with Bm in {1, B}: per-batch offsets/positions
+    # broadcast against the shared causal structure
+    qo = jnp.asarray(q_offset)
+    qpos = jnp.arange(Sq)[None, :, None] + (
+        qo[:, None, None] if qo.ndim == 1 else qo)
     if kv_positions is None:
-        kpos = jnp.arange(Skv)[None, :]
+        kpos = jnp.arange(Skv)[None, None, :]
     else:
-        kpos = kv_positions[None, :]
+        kvp = jnp.asarray(kv_positions)
+        kpos = kvp[None, None, :] if kvp.ndim == 1 else kvp[:, None, :]
     mask = kpos >= 0
     if causal:
-        mask &= kpos <= qpos
+        mask = mask & (kpos <= qpos)
     if window is not None:
-        mask &= kpos > qpos - window
+        mask = mask & (kpos > qpos - window)
 
     # Two GQA layouts (§Perf log):
     #  * decode (Sq==1): grouped einsum over un-repeated K/V — an 8x repeat
@@ -91,7 +101,7 @@ def attention_ref(
         qg = qs.reshape(B, Sq, Hkv, group, D)
         logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
                             preferred_element_type=jnp.float32)
-        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        logits = jnp.where(mask[:, None, None], logits, NEG_INF)
         probs = jax.nn.softmax(logits, axis=-1)
         out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
                          preferred_element_type=jnp.float32)
@@ -101,7 +111,7 @@ def attention_ref(
     vf = jnp.repeat(v, group, axis=2)
     logits = jnp.einsum("bqhd,bkhd->bhqk", qs, kf,
                         preferred_element_type=jnp.float32)
-    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    logits = jnp.where(mask[:, None], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), vf,
                      preferred_element_type=jnp.float32)

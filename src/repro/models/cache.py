@@ -9,11 +9,28 @@
 Fixed-window layers get ring buffers whenever the window is smaller than
 the nominal cache length — this is what bounds the ``long_500k`` working
 set for the sub-quadratic architectures.
+
+Serving extensions (the slot-granular continuous-batching engine):
+
+* ``pos`` may be a per-slot ``(B,)`` vector instead of a scalar
+  (``init_caches(..., per_slot_pos=True)``): each batch slot keeps its own
+  write cursor, so requests admitted mid-decode sit at different depths in
+  one persistent cache.
+* ``start`` (attention kinds only) is an optional ``(B,)`` row offset of
+  each slot's first *real* token — left-padded wave prefills set it to the
+  pad widths so the attention mask can reject pad keys (real position =
+  cache row - start; negative = invalid).
+* ``reset_slot`` / ``write_prompt`` are the per-slot lifecycle: a slot is
+  recycled in place (no realloc) when its request completes, and a new
+  request's single-sequence prefill cache is copied into the freed slot.
+* ``stack_caches`` / ``unstack_caches`` convert between the per-layer list
+  and the pre-stacked ``LayerCache`` (leading layer dim) that
+  ``models.model.forward`` scans in place — the production serve layout.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional
+from typing import Any, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,16 +47,19 @@ class LayerCache:
     state: Any = None
     conv: Any = None
     h: Any = None
+    start: Any = None  # (B,) row of each slot's first real token (attn kinds)
 
 
 jax.tree_util.register_dataclass(
     LayerCache,
-    data_fields=["k", "v", "pos", "conv_x", "conv_bc", "state", "conv", "h"],
+    data_fields=["k", "v", "pos", "conv_x", "conv_bc", "state", "conv", "h",
+                 "start"],
     meta_fields=["kind"],
 )
 
 
-def init_layer_cache(kind: str, cfg, batch: int, max_len: int, dtype) -> LayerCache:
+def init_layer_cache(kind: str, cfg, batch: int, max_len: int, dtype,
+                     per_slot_pos: bool = False) -> LayerCache:
     if kind == "ssd":
         from .ssm import _dims
 
@@ -65,27 +85,124 @@ def init_layer_cache(kind: str, cfg, batch: int, max_len: int, dtype) -> LayerCa
     else:
         raise ValueError(kind)
     Hkv, Dh = cfg.num_kv_heads, cfg.head_dim
+    pos0 = (jnp.zeros((batch,), jnp.int32) if per_slot_pos
+            else jnp.zeros((), jnp.int32))
     if window is not None and window < max_len:
         return LayerCache(
             kind="ring",
             k=jnp.zeros((batch, window, Hkv, Dh), dtype),
             v=jnp.zeros((batch, window, Hkv, Dh), dtype),
-            pos=jnp.zeros((), jnp.int32),
+            pos=pos0,
         )
     return LayerCache(
         kind="full",
         k=jnp.zeros((batch, max_len, Hkv, Dh), dtype),
         v=jnp.zeros((batch, max_len, Hkv, Dh), dtype),
-        pos=jnp.zeros((), jnp.int32),
+        pos=pos0,
     )
 
 
-def init_caches(cfg, batch: int, max_len: int, dtype=None) -> List[LayerCache]:
+def init_caches(cfg, batch: int, max_len: int, dtype=None,
+                per_slot_pos: bool = False) -> List[LayerCache]:
     dtype = dtype or jnp.dtype(cfg.dtype)
     return [
-        init_layer_cache(kind, cfg, batch, max_len, dtype)
+        init_layer_cache(kind, cfg, batch, max_len, dtype,
+                         per_slot_pos=per_slot_pos)
         for kind in cfg.pattern_for_depth()
     ]
+
+
+# ------------------------------------------------- slot lifecycle (serving)
+Caches = Union[LayerCache, List[LayerCache]]
+
+_STATE_FIELDS = ("k", "v", "conv_x", "conv_bc", "state", "conv", "h")
+
+
+def stack_caches(caches: Sequence[LayerCache]) -> LayerCache:
+    """Per-layer list -> one LayerCache with a leading layer dim.
+
+    Only valid for homogeneous stacks (every layer the same kind/shape);
+    the result is what ``model.forward`` accepts pre-stacked and scans
+    with in-place updates (no per-step stack/unstack copies).
+    """
+    kinds = {c.kind for c in caches}
+    if len(kinds) != 1:
+        raise ValueError(f"cannot stack heterogeneous cache kinds {kinds}")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+
+def unstack_caches(stacked: LayerCache, num_layers: int) -> List[LayerCache]:
+    """Inverse of ``stack_caches`` (copies; diagnostic/test use)."""
+    return [jax.tree.map(lambda s: s[i], stacked) for i in range(num_layers)]
+
+
+def _layer_reset_slot(cache: LayerCache, slot) -> LayerCache:
+    """Zero batch entry ``slot`` of one layer's cache (pos/start included)."""
+    upd = {}
+    for f in _STATE_FIELDS:
+        a = getattr(cache, f)
+        if a is not None:
+            upd[f] = a.at[slot].set(jnp.zeros((), a.dtype), mode="drop")
+    for f in ("pos", "start"):
+        a = getattr(cache, f)
+        if a is not None:
+            upd[f] = (a.at[slot].set(0, mode="drop") if a.ndim == 1
+                      else jnp.zeros_like(a))
+    return dataclasses.replace(cache, **upd)
+
+
+def _layer_write_prompt(cache: LayerCache, slot,
+                        prefill: LayerCache) -> LayerCache:
+    """Copy a single-sequence (B=1) prefill cache into batch slot ``slot``.
+
+    Overwrites the slot's *entire* state (K/V rows, conv tails, recurrent
+    state, cursor), so admission into a dirty slot needs no separate
+    reset.  ``prefill.pos`` may be scalar (the B=1 prefill path) or (1,).
+    """
+    if cache.kind != prefill.kind:
+        raise ValueError(f"cache kind mismatch: {cache.kind} vs {prefill.kind}")
+    upd = {}
+    for f in _STATE_FIELDS:
+        a, p = getattr(cache, f), getattr(prefill, f)
+        if a is not None:
+            upd[f] = a.at[slot].set(p[0].astype(a.dtype), mode="drop")
+    for f in ("pos", "start"):
+        a, p = getattr(cache, f), getattr(prefill, f)
+        if a is None:
+            continue
+        if a.ndim == 0:
+            raise ValueError(
+                "write_prompt needs per-slot cursors; build the engine cache "
+                "with init_caches(..., per_slot_pos=True)")
+        src = jnp.zeros((), a.dtype) if p is None else (
+            p if jnp.ndim(p) == 0 else p[0])
+        upd[f] = a.at[slot].set(src.astype(a.dtype), mode="drop")
+    return dataclasses.replace(cache, **upd)
+
+
+def reset_slot(caches: Caches, slot) -> Caches:
+    """Zero one batch slot across every layer (list or stacked caches)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    if isinstance(caches, LayerCache):
+        return jax.vmap(lambda c: _layer_reset_slot(c, slot))(caches)
+    return [_layer_reset_slot(c, slot) for c in caches]
+
+
+def write_prompt(caches: Caches, slot, prefill: Caches) -> Caches:
+    """Admit a prefilled request into batch slot ``slot``.
+
+    ``prefill`` is the cache a B=1 unpadded prefill produced (list for
+    unrolled stacks, stacked LayerCache for scanned homogeneous stacks —
+    matching ``caches``); its whole per-slot state is copied in, replacing
+    whatever the freed slot held.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    if isinstance(caches, LayerCache):
+        if not isinstance(prefill, LayerCache):
+            prefill = stack_caches(prefill)
+        return jax.vmap(lambda c, p: _layer_write_prompt(c, slot, p))(
+            caches, prefill)
+    return [_layer_write_prompt(c, slot, p) for c, p in zip(caches, prefill)]
 
 
 def cache_logical_axes(cache: LayerCache) -> LayerCache:

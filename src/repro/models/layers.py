@@ -175,10 +175,22 @@ def apply_attention(
     """GQA attention; returns (out, new_cache).
 
     Cache kinds (see models.cache):
-      full cache: {"kind":"full", "k","v": (B, Smax, Hkv, Dh), "pos": scalar}
-      ring cache: {"kind":"ring", "k","v": (B, W, Hkv, Dh), "pos": scalar}
+      full cache: {"kind":"full", "k","v": (B, Smax, Hkv, Dh), "pos"}
+      ring cache: {"kind":"ring", "k","v": (B, W, Hkv, Dh), "pos"}
         — fixed-size sliding-window buffer; slot = pos % W; absolute key
           positions reconstructed from pos so masking stays exact.
+
+    ``cache.pos`` may be scalar (every row at the same depth — the wave /
+    train paths) or per-slot ``(B,)`` (the serving engine's slot-granular
+    decode: each slot writes its own row and masks its own depth; per-slot
+    cursors support single-token steps only — slot prefill runs unpadded
+    at B=1 and is copied in via ``cache.write_prompt``).
+
+    ``cache.start`` (optional, ``(B,)``) is each slot's first real row —
+    left-padded wave prefills set it to the pad widths; real key position
+    = row - start, and pad rows land at negative positions, which the
+    mask rejects (this is what keeps shorter prompts in a padded wave
+    from attending to their padding).
     """
     B, S, d = x.shape
     q = matmul(x, p["wq"])  # (B,S,H,Dh)
@@ -194,10 +206,41 @@ def apply_attention(
     k = constrain(k, "batch", "seq_full", "kv_heads_act", None)
 
     new_cache = None
+    start = cache.start if cache is not None else None
+
+    def _offsets(pos, nrows):
+        """(q_offset, kv_positions) for rows 0..nrows-1 at cursor ``pos``."""
+        rows = jnp.arange(nrows, dtype=jnp.int32)[None, :]
+        if start is None:
+            if jnp.ndim(pos) == 0:
+                return pos, None
+            return pos, jnp.broadcast_to(rows, (B, nrows))
+        return pos - start, rows - start[:, None]
+
     if cache is None:
         out = ops.attention(
             q, k, v, causal=cfg.causal, window=window, impl=kernel_impl
         )
+    elif cache.kind == "full" and jnp.ndim(cache.pos) == 1:
+        if S != 1:
+            raise ValueError(
+                "per-slot cache cursors support single-token decode only; "
+                "prefill slots unpadded at B=1 and admit via write_prompt")
+        pos = cache.pos  # (B,): #rows already cached per slot
+        bidx = jnp.arange(B)
+        ck = cache.k.at[bidx, pos].set(k[:, 0].astype(cache.k.dtype),
+                                       mode="drop")
+        cv = cache.v.at[bidx, pos].set(v[:, 0].astype(cache.v.dtype),
+                                       mode="drop")
+        ck = constrain(ck, "batch", "kv_seq", "kv_heads_act", None)
+        cv = constrain(cv, "batch", "kv_seq", "kv_heads_act", None)
+        q_off, kv_pos = _offsets(pos, cache.k.shape[1])
+        out = ops.attention(
+            q, ck, cv, causal=True, window=window, q_offset=q_off,
+            kv_positions=kv_pos, impl=kernel_impl,
+        )
+        new_cache = LayerCache(kind="full", k=ck, v=cv, pos=pos + 1,
+                               start=start)
     elif cache.kind == "full":
         pos = cache.pos  # scalar int32: #tokens already cached
         ck = jax.lax.dynamic_update_slice(
@@ -208,41 +251,62 @@ def apply_attention(
         cv = constrain(cv, "batch", "kv_seq", "kv_heads_act", None)
         # slots beyond pos+S are zero/stale; causal mask with q_offset=pos
         # blocks every j > pos+S-1 so they are never read.
+        q_off, kv_pos = _offsets(pos, cache.k.shape[1])
         out = ops.attention(
-            q, ck, cv, causal=True, window=window, q_offset=pos,
-            impl=kernel_impl,
+            q, ck, cv, causal=True, window=window, q_offset=q_off,
+            kv_positions=kv_pos, impl=kernel_impl,
         )
-        new_cache = LayerCache(kind="full", k=ck, v=cv, pos=pos + S)
+        new_cache = LayerCache(kind="full", k=ck, v=cv, pos=pos + S,
+                               start=start)
     elif cache.kind == "ring" and S > 1:
         # prefill: full-sequence windowed attention, then stash the last
         # min(W, S) keys/values into the ring buffer for decode.
         W = cache.k.shape[1]
+        if start is None:
+            q_off, kv_pos = 0, None
+        else:
+            q_off = -start
+            kv_pos = jnp.arange(S, dtype=jnp.int32)[None, :] - start[:, None]
         out = ops.attention(
-            q, k, v, causal=cfg.causal, window=window, impl=kernel_impl
+            q, k, v, causal=cfg.causal, window=window, q_offset=q_off,
+            kv_positions=kv_pos, impl=kernel_impl
         )
         take = min(W, S)
         slots = (jnp.arange(S - take, S, dtype=jnp.int32)) % W
         ck = cache.k.at[:, slots].set(k[:, S - take:].astype(cache.k.dtype))
         cv = cache.v.at[:, slots].set(v[:, S - take:].astype(cache.v.dtype))
-        new_cache = LayerCache(kind="ring", k=ck, v=cv, pos=cache.pos + S)
+        new_cache = LayerCache(kind="ring", k=ck, v=cv, pos=cache.pos + S,
+                               start=start)
     elif cache.kind == "ring":
         W = cache.k.shape[1]
         pos = cache.pos
-        slot = pos % W
-        ck = jax.lax.dynamic_update_slice(
-            cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+        if jnp.ndim(pos) == 1:
+            slot = pos % W
+            bidx = jnp.arange(B)
+            ck = cache.k.at[bidx, slot].set(k[:, 0].astype(cache.k.dtype))
+            cv = cache.v.at[bidx, slot].set(v[:, 0].astype(cache.v.dtype))
+            slots = jnp.arange(W, dtype=jnp.int32)[None, :]
+            rows = pos[:, None] - ((pos[:, None] - slots) % W)
+        else:
+            slot = pos % W
+            ck = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+            # slot s holds absolute position: largest p <= pos, p % W == s
+            slots = jnp.arange(W, dtype=jnp.int32)
+            rows = pos - ((pos - slots) % W)  # in (pos-W, pos]
         ck = constrain(ck, "batch", "kv_seq", "kv_heads_act", None)
         cv = constrain(cv, "batch", "kv_seq", "kv_heads_act", None)
-        # slot s holds absolute position: largest p <= pos with p % W == s
-        slots = jnp.arange(W, dtype=jnp.int32)
-        kv_pos = pos - ((pos - slots) % W)  # in (pos-W, pos]
+        q_off = pos if start is None else pos - start
+        kv_pos = rows if start is None else (
+            (rows if rows.ndim == 2 else rows[None, :]) - start[:, None])
         out = ops.attention(
-            q, ck, cv, causal=True, window=window, q_offset=pos,
+            q, ck, cv, causal=True, window=window, q_offset=q_off,
             kv_positions=kv_pos, impl=kernel_impl,
         )
-        new_cache = LayerCache(kind="ring", k=ck, v=cv, pos=pos + 1)
+        new_cache = LayerCache(kind="ring", k=ck, v=cv, pos=pos + 1,
+                               start=start)
     else:
         raise ValueError(cache.kind)
 

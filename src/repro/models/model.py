@@ -150,7 +150,7 @@ def forward(
     tokens: Optional[jax.Array] = None,   # (B, S) int32
     embeds: Optional[jax.Array] = None,   # (B, S, d) modality-frontend stub
     caches: Optional[List[LayerCache]] = None,
-    pos=0,  # scalar: absolute position of the first input token
+    pos=0,  # absolute position of the first input token: scalar or (B,)
     last_token_only: bool = False,  # unembed only the final position
 ) -> Tuple[jax.Array, Optional[List[LayerCache]], Dict]:
     """Returns (logits, new_caches, aux)."""
@@ -161,7 +161,11 @@ def forward(
         h = L.apply_embedding(params["embed"], tokens)
         B, S = tokens.shape
     h = constrain(h, "batch", "seq", None)
-    positions = pos + jnp.arange(S, dtype=jnp.int32)[None, :]
+    pos_arr = jnp.asarray(pos, jnp.int32)
+    if pos_arr.ndim == 1:  # per-slot depths (serving engine)
+        positions = pos_arr[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    else:
+        positions = pos_arr + jnp.arange(S, dtype=jnp.int32)[None, :]
     positions = jnp.broadcast_to(positions, (B, S))
 
     pattern = cfg.pattern_for_depth()

@@ -1,16 +1,42 @@
-"""Serving engine: batched prefill + decode with continuous batching.
+"""Serving engine: slot-granular continuous batching with chunked decode.
 
-``ServeEngine`` maintains a fixed pool of batch slots over jitted
-``prefill`` and ``decode_step`` programs (compiled once per shape class).
-Requests are admitted into free slots as others complete — the
-vLLM-style continuous-batching control loop reduced to its scheduling
-essence, host-side and observable.  The decode step is exactly what the
-``decode_*``/``long_*`` dry-run cells lower.
+``ServeEngine`` owns a fixed pool of batch slots backed by ONE persistent
+slotted cache (allocated at construction, never reallocated): each layer's
+``LayerCache`` carries a per-slot write cursor (``pos``: (B,)), so every
+slot sits at its own depth.  The request lifecycle is:
+
+  submit -> (slot frees up) -> unpadded B=1 prefill -> ``write_prompt``
+  copies the prefill cache into the freed slot -> slot decodes alongside
+  requests admitted earlier -> completion (``max_new_tokens`` or
+  ``eos_id``) -> ``reset_slot``.
+
+Admission is *slot-granular*: a freed slot is refilled between decode
+chunks, mid-flight for everyone else — no wave boundaries.  Prefill runs
+unpadded at batch 1, so admission is bit-exact with running the request
+alone (no left-pad pollution) at the cost of one compile-cache entry per
+distinct prompt length.
+
+Decode runs in one of two modes:
+
+  ``"chunked"`` (default) — an on-device ``lax.while_loop`` advances up
+    to ``chunk_size`` tokens per launch, carrying (tokens, caches, pos,
+    remaining-budget) with per-slot stop conditions; the host syncs once
+    per CHUNK (fetching the token buffer), not once per token.  Per
+    request that is ceil(tokens/chunk_size) + 1 host syncs instead of
+    O(tokens) — the Task Bench §IV-B dispatch/sync floor amortized.
+  ``"host"`` — the legacy per-token loop (one jitted step + one device
+    round-trip per token), kept as the measurement baseline.
+
+Both modes trace the same ``M.forward`` step, so they are bit-exact with
+each other.  ``engine.stats`` counts prefills / decode steps / chunk
+launches / host syncs for the structural tests and the ``serve_load``
+bench family.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -18,7 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import model as M
-from ..models.cache import init_caches
+from ..models.cache import (LayerCache, init_caches, reset_slot,
+                            stack_caches, write_prompt)
 
 
 @dataclasses.dataclass
@@ -26,12 +53,21 @@ class Request:
     rid: int
     prompt: np.ndarray           # (S,) int32
     max_new_tokens: int
+    eos_id: Optional[int] = None  # early-stop token (emitted, then stop)
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # wallclock marks (perf_counter seconds) for TTFT/TPOT measurement
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
 
 
 def serve_step(params, tokens, caches, pos, *, cfg):
-    """One decode step for the whole batch: (B,1) tokens -> (B,1) next."""
+    """One decode step for the whole batch: (B,1) tokens -> (B,1) next.
+
+    ``pos`` may be scalar (all rows at the same depth — the dry-run cells)
+    or per-slot (B,) to match per-slot cache cursors.
+    """
     logits, new_caches, _ = M.forward(params, cfg, tokens=tokens,
                                       caches=caches, pos=pos,
                                       last_token_only=True)
@@ -39,73 +75,278 @@ def serve_step(params, tokens, caches, pos, *, cfg):
     return nxt[:, None], new_caches
 
 
-def prefill(params, tokens, caches, pos=0, *, cfg):
+def _with_start(caches, start):
+    """Attach per-slot start offsets to the attention layers of ``caches``."""
+    def one(c, layer_dim):
+        if c.kind not in ("full", "ring"):
+            return c
+        s = start
+        if layer_dim:  # pre-stacked: every leaf leads with the layer dim
+            s = jnp.broadcast_to(start, (c.k.shape[0],) + start.shape)
+        return dataclasses.replace(c, start=s)
+
+    if isinstance(caches, LayerCache):
+        return one(caches, layer_dim=True)
+    return [one(c, layer_dim=False) for c in caches]
+
+
+def prefill(params, tokens, caches, pos=0, *, cfg, pad=None):
+    """Batched prefill; returns ((B,1) first sampled token, new caches).
+
+    ``pad`` (optional (B,) int32) gives the left-pad width of each row.
+    When set, attention layers store it as a per-slot ``start`` offset:
+    pad rows land at negative key positions and are masked out, and RoPE
+    positions are rebased so each row's first REAL token sits at position
+    0 — a padded-batch prefill then matches per-row unpadded prefills
+    exactly for attention layers.  Recurrent/SSM state still absorbs the
+    pad rows (their scans have no position mask); the serving engine
+    sidesteps this entirely by prefilling unpadded at B=1.
+    """
+    if pad is not None:
+        pad = jnp.asarray(pad, jnp.int32)
+        caches = _with_start(caches, pad)
+        pos = pos - pad  # (B,): rebased RoPE positions per row
     logits, new_caches, _ = M.forward(params, cfg, tokens=tokens,
                                       caches=caches, pos=pos,
                                       last_token_only=True)
     nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
     return nxt[:, None], new_caches
+
+
+def _prefill_one(params, tokens, *, cfg, max_len):
+    """Unpadded single-request prefill; returns (first token scalar, caches).
+
+    Fresh B=1 caches are created inside the trace (XLA fuses the zeros
+    away for the rows the prefill overwrites); the engine's persistent
+    B=slots pool is never reallocated.
+    """
+    caches = init_caches(cfg, 1, max_len)
+    logits, new_caches, _ = M.forward(params, cfg, tokens=tokens,
+                                      caches=caches, pos=0,
+                                      last_token_only=True)
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    return nxt[0], new_caches
+
+
+def _decode_chunk(params, tokens, caches, pos, remaining, eos, *, cfg, chunk):
+    """Advance up to ``chunk`` decode steps on device; one host sync total.
+
+    Carries (step t, (B,1) tokens, caches, (B,) pos, (B,) remaining
+    budget, (B, chunk) output buffer) through a ``lax.while_loop``; stops
+    early when every slot's budget hits 0.  Per-slot stops: ``remaining``
+    counts tokens still owed (0 = dead slot), and emitting ``eos[b]``
+    (when >= 0) zeroes the budget.  Dead slots keep stepping harmlessly —
+    batch rows are independent and their writes land in rows that
+    ``write_prompt`` overwrites at the next admission.
+
+    Output buffer rows are -1-sentinel-filled; entry (b, t) holds the
+    token slot b emitted at step t iff it was live then.
+    """
+    B = tokens.shape[0]
+    out0 = jnp.full((B, chunk), -1, jnp.int32)
+
+    def cond(carry):
+        t, _toks, _cs, _pos, rem, _out = carry
+        return (t < chunk) & jnp.any(rem > 0)
+
+    def body(carry):
+        t, toks, cs, pos, rem, out = carry
+        logits, cs2, _ = M.forward(params, cfg, tokens=toks, caches=cs,
+                                   pos=pos, last_token_only=True)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)  # (B,)
+        live = rem > 0
+        out = out.at[:, t].set(jnp.where(live, nxt, -1), mode="drop")
+        rem2 = jnp.where(live, rem - 1, 0)
+        rem2 = jnp.where(live & (eos >= 0) & (nxt == eos), 0, rem2)
+        return (t + 1, nxt[:, None], cs2, pos + 1, rem2, out)
+
+    carry = (jnp.int32(0), tokens, caches, pos, remaining, out0)
+    t, toks, cs, pos, rem, out = jax.lax.while_loop(cond, body, carry)
+    return out, toks, cs, pos, rem, t
 
 
 class ServeEngine:
-    def __init__(self, cfg, params, batch_slots: int = 4, max_len: int = 512):
+    """Continuous-batching engine over a persistent slotted cache.
+
+    Args:
+      batch_slots: size of the fixed slot pool (compiled batch width).
+      max_len: per-slot cache rows; submit() enforces
+        len(prompt) + max_new_tokens <= max_len.
+      chunk_size: decode steps per device launch in chunked mode.
+      decode_mode: "chunked" (on-device while_loop, 1 sync/chunk) or
+        "host" (per-token loop, 1 sync/token — the baseline).
+    """
+
+    def __init__(self, cfg, params, batch_slots: int = 4, max_len: int = 512,
+                 chunk_size: int = 8, decode_mode: str = "chunked"):
         assert cfg.supports_decode, f"{cfg.name} is encoder-only"
+        if decode_mode not in ("chunked", "host"):
+            raise ValueError(f"unknown decode_mode {decode_mode!r}")
         self.cfg, self.params = cfg, params
         self.slots = batch_slots
         self.max_len = max_len
+        self.chunk_size = int(chunk_size)
+        self.decode_mode = decode_mode
+
+        # ONE persistent slotted cache for the life of the engine.
+        per_layer = init_caches(cfg, batch_slots, max_len, per_slot_pos=True)
+        pattern = cfg.pattern_for_depth()
+        self._stacked = bool(cfg.scan_layers) and len(set(pattern)) == 1
+        self.caches = stack_caches(per_layer) if self._stacked else per_layer
+
         self._decode = jax.jit(functools.partial(serve_step, cfg=cfg))
-        self._prefill = jax.jit(functools.partial(prefill, cfg=cfg),
-                                static_argnames=())
+        self._prefill1 = jax.jit(
+            functools.partial(_prefill_one, cfg=cfg, max_len=max_len))
+        self._chunk = jax.jit(functools.partial(
+            _decode_chunk, cfg=cfg, chunk=self.chunk_size))
+        self._admit_fn = jax.jit(write_prompt)
+        self._reset_fn = jax.jit(reset_slot)
+
+        B = batch_slots
+        self.cur = jnp.zeros((B, 1), jnp.int32)   # next input token per slot
+        self._pos = np.zeros((B,), np.int32)      # host mirror of cache.pos
+        self._rem = np.zeros((B,), np.int32)      # tokens still owed per slot
+        self._eos = np.full((B,), -1, np.int32)   # eos id per slot (-1: none)
+        self._slot_req: List[Optional[Request]] = [None] * B
         self._queue: List[Request] = []
         self._next_rid = 0
+        self.stats = {"prefills": 0, "decode_steps": 0, "chunk_launches": 0,
+                      "host_syncs": 0, "tokens_generated": 0}
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+    # ------------------------------------------------------------- frontend
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError("prompt must be a non-empty 1-D token array")
+        if len(prompt) + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"len(prompt)={len(prompt)} + max_new_tokens={max_new_tokens} "
+                f"exceeds max_len={self.max_len}")
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                   max_new_tokens))
+        r = Request(rid, prompt, max_new_tokens, eos_id=eos_id)
+        r.t_submit = time.perf_counter()
+        self._queue.append(r)
         return rid
 
-    def run(self) -> Dict[int, List[int]]:
-        """Drain the queue with continuous batching; returns rid -> tokens.
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(
+            r is not None for r in self._slot_req)
 
-        Prompts in a wave are right-aligned (left-padded) to a shared
-        length so one prefill serves the whole wave.
-        """
-        results: Dict[int, List[int]] = {}
-        while self._queue:
-            wave = self._queue[: self.slots]
-            self._queue = self._queue[self.slots:]
-            plen = max(len(r.prompt) for r in wave)
-            B = len(wave)
-            toks = np.zeros((B, plen), np.int32)
-            for i, r in enumerate(wave):
-                toks[i, plen - len(r.prompt):] = r.prompt  # left-pad with BOS=0
-            caches = init_caches(self.cfg, B, max_len=self.max_len)
-            cur, caches = self._prefill(self.params, tokens=jnp.asarray(toks),
-                                        caches=caches, pos=0)
-            pos = plen
-            live = {i: r for i, r in enumerate(wave)}
-            for i, r in live.items():
-                r.out.append(int(cur[i, 0]))
-            budget = max(r.max_new_tokens for r in wave) - 1
-            for _ in range(max(budget, 0)):
-                cur, caches = self._decode(self.params, tokens=cur,
-                                           caches=caches, pos=jnp.int32(pos))
-                pos += 1
-                done_now = []
-                for i, r in live.items():
-                    if len(r.out) < r.max_new_tokens:
-                        r.out.append(int(cur[i, 0]))
-                    if len(r.out) >= r.max_new_tokens:
-                        done_now.append(i)
-                for i in done_now:
-                    r = live.pop(i)
-                    r.done = True
-                    results[r.rid] = r.out
-                if not live:
-                    break
-            for r in live.values():
+    # ------------------------------------------------------------ lifecycle
+    def _complete(self, slot: int, results: Dict[int, List[int]]) -> Request:
+        r = self._slot_req[slot]
+        r.done = True
+        r.t_done = time.perf_counter()
+        results[r.rid] = r.out
+        self._slot_req[slot] = None
+        self._rem[slot] = 0
+        self._pos[slot] = 0
+        self.caches = self._reset_fn(self.caches, slot)
+        return r
+
+    def _admit(self, results: Dict[int, List[int]]) -> List[Request]:
+        """Prefill queued requests into free slots; returns any that
+        completed at prefill (max_new_tokens == 1 or instant eos)."""
+        finished = []
+        for slot in range(self.slots):
+            if not self._queue or self._slot_req[slot] is not None:
+                continue
+            r = self._queue.pop(0)
+            tok, pf_caches = self._prefill1(
+                self.params, jnp.asarray(r.prompt)[None, :])
+            first = int(tok)  # host sync: first token of this request
+            self.stats["prefills"] += 1
+            self.stats["host_syncs"] += 1
+            self.stats["tokens_generated"] += 1
+            r.t_first = time.perf_counter()
+            r.out.append(first)
+            if len(r.out) >= r.max_new_tokens or (
+                    r.eos_id is not None and first == r.eos_id):
                 r.done = True
+                r.t_done = r.t_first
                 results[r.rid] = r.out
+                finished.append(r)
+                continue
+            self.caches = self._admit_fn(self.caches, slot, pf_caches)
+            self.cur = self.cur.at[slot, 0].set(first)
+            self._pos[slot] = len(r.prompt)
+            self._rem[slot] = r.max_new_tokens - 1
+            self._eos[slot] = -1 if r.eos_id is None else r.eos_id
+            self._slot_req[slot] = r
+        return finished
+
+    def _harvest(self, slot_tokens, results) -> List[Request]:
+        """Append per-slot tokens; complete slots whose budget hit 0."""
+        finished = []
+        for slot, toks in enumerate(slot_tokens):
+            r = self._slot_req[slot]
+            if r is None:
+                continue
+            for t in toks:
+                r.out.append(int(t))
+                self.stats["tokens_generated"] += 1
+            if self._rem[slot] <= 0:
+                finished.append(self._complete(slot, results))
+        return finished
+
+    def _step_chunked(self, results) -> List[Request]:
+        out, self.cur, self.caches, _pos_dev, rem, t = self._chunk(
+            self.params, self.cur, self.caches, jnp.asarray(self._pos),
+            jnp.asarray(self._rem), jnp.asarray(self._eos))
+        out = np.asarray(out)            # ONE host sync for the whole chunk
+        rem = np.asarray(rem)
+        steps = int(t)
+        self.stats["chunk_launches"] += 1
+        self.stats["host_syncs"] += 1
+        self.stats["decode_steps"] += steps
+        self._pos += steps               # all slots advance together
+        live = [s for s in range(self.slots) if self._slot_req[s] is not None]
+        slot_tokens = [[] for _ in range(self.slots)]
+        for s in live:
+            row = out[s]
+            slot_tokens[s] = [int(v) for v in row[row >= 0]]
+        self._rem[:] = rem
+        return self._harvest(slot_tokens, results)
+
+    def _step_host(self, results) -> List[Request]:
+        self.cur, self.caches = self._decode(
+            self.params, self.cur, self.caches, jnp.asarray(self._pos))
+        cur = np.asarray(self.cur)       # one host sync PER TOKEN
+        self.stats["decode_steps"] += 1
+        self.stats["host_syncs"] += 1
+        self._pos += 1
+        slot_tokens = [[] for _ in range(self.slots)]
+        for s in range(self.slots):
+            r = self._slot_req[s]
+            if r is None:
+                continue
+            tok = int(cur[s, 0])
+            slot_tokens[s] = [tok]
+            self._rem[s] -= 1
+            if r.eos_id is not None and tok == r.eos_id:
+                self._rem[s] = 0
+        return self._harvest(slot_tokens, results)
+
+    def step(self, results: Optional[Dict[int, List[int]]] = None
+             ) -> List[Request]:
+        """One scheduler tick: admit into free slots, then decode one chunk
+        (chunked mode) or one token (host mode).  Returns the requests that
+        completed this tick."""
+        results = results if results is not None else {}
+        finished = self._admit(results)
+        if any(r is not None for r in self._slot_req):
+            if self.decode_mode == "chunked":
+                finished += self._step_chunked(results)
+            else:
+                finished += self._step_host(results)
+        return finished
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drain the queue with continuous batching; returns rid -> tokens."""
+        results: Dict[int, List[int]] = {}
+        while self.has_work:
+            self.step(results)
         return results

@@ -1,21 +1,61 @@
-"""Serving engine: continuous batching semantics + determinism."""
+"""Serving engine: continuous-batching semantics, chunked-decode
+conformance, slot lifecycle, and the serve_load bench family."""
+import dataclasses
+import math
+import os
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced
 from repro.models import model as M
+from repro.models.cache import init_caches, reset_slot
 from repro.models.layers import split_leaves
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ServeEngine, prefill, serve_step
+
+
+def _build(name):
+    cfg = reduced(get_config(name))
+    params, _ = split_leaves(M.init_model(jax.random.PRNGKey(0), cfg))
+    return cfg, params
 
 
 @pytest.fixture(scope="module")
-def engine():
-    cfg = reduced(get_config("qwen1.5-0.5b"))
-    params, _ = split_leaves(M.init_model(jax.random.PRNGKey(0), cfg))
+def qwen():
+    return _build("qwen1.5-0.5b")       # full attention, stacked scan
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    return _build("recurrentgemma-2b")  # ring + rglru, heterogeneous list
+
+
+@pytest.fixture(scope="module")
+def mamba():
+    return _build("mamba2-2.7b")        # ssm, stacked scan
+
+
+@pytest.fixture(scope="module")
+def engine(qwen):
+    cfg, params = qwen
     return ServeEngine(cfg, params, batch_slots=2, max_len=64)
 
 
+REQS = [([1, 2, 3], 7), ([4, 5], 3), ([6], 5), ([7, 8, 9, 1], 4)]
+
+
+def _drain(cfg, params, mode, reqs=REQS, chunk_size=4, eos=None):
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64,
+                      chunk_size=chunk_size, decode_mode=mode)
+    rids = [eng.submit(np.array(p), max_new_tokens=m, eos_id=eos)
+            for p, m in reqs]
+    out = eng.run()
+    return [out[r] for r in rids], eng.stats
+
+
+# ------------------------------------------------------------ base semantics
 def test_lengths_and_completion(engine):
     r1 = engine.submit(np.array([1, 2, 3]), max_new_tokens=5)
     r2 = engine.submit(np.array([4, 5]), max_new_tokens=3)
@@ -41,3 +81,297 @@ def test_encoder_only_rejected():
     params, _ = split_leaves(M.init_model(jax.random.PRNGKey(0), cfg))
     with pytest.raises(AssertionError, match="encoder-only"):
         ServeEngine(cfg, params)
+
+
+def test_submit_validation(engine):
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        engine.submit(np.arange(60), max_new_tokens=16)
+    with pytest.raises(ValueError, match="non-empty"):
+        engine.submit(np.array([], np.int32))
+    with pytest.raises(ValueError, match="decode_mode"):
+        ServeEngine(engine.cfg, engine.params, decode_mode="turbo")
+
+
+# ------------------------------------------- chunked-decode conformance suite
+@pytest.mark.parametrize("model", ["qwen", "gemma", "mamba"])
+def test_chunked_matches_host_mixed_budgets(model, request):
+    """On-device chunked decode is bit-exact vs the per-token host loop
+    for mixed max_new_tokens — including requests admitted mid-decode
+    (4 requests into 2 slots)."""
+    cfg, params = request.getfixturevalue(model)
+    chunked, s_chunk = _drain(cfg, params, "chunked")
+    host, s_host = _drain(cfg, params, "host")
+    assert chunked == host
+    # same work, radically different sync counts
+    assert s_chunk["tokens_generated"] == s_host["tokens_generated"]
+    assert s_chunk["host_syncs"] < s_host["host_syncs"]
+
+
+@pytest.mark.parametrize("model", ["qwen", "gemma", "mamba"])
+def test_admission_matches_alone(model, request):
+    """Mid-decode admission yields exactly the tokens each request
+    produces running alone on a fresh engine (batch-row independence +
+    unpadded B=1 prefill)."""
+    cfg, params = request.getfixturevalue(model)
+    together, _ = _drain(cfg, params, "chunked")
+    for (p, m), got in zip(REQS, together):
+        alone, _ = _drain(cfg, params, "chunked", reqs=[(p, m)])
+        assert got == alone[0], (p, m)
+
+
+@pytest.mark.parametrize("model", ["qwen", "gemma", "mamba"])
+def test_slot_reuse_leak_free(model, request):
+    """A slot recycled through noisy prior requests serves a later
+    request identically to a fresh engine (reset_slot + write_prompt
+    leave no residue, all cache kinds)."""
+    cfg, params = request.getfixturevalue(model)
+    target = ([9, 1, 9], 6)
+    fresh, _ = _drain(cfg, params, "chunked", reqs=[target])
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64, chunk_size=4)
+    for p, m in REQS:  # churn every slot through several lifecycles
+        eng.submit(np.array(p), max_new_tokens=m)
+    eng.run()
+    rid = eng.submit(np.array(target[0]), max_new_tokens=target[1])
+    assert eng.run()[rid] == fresh[0]
+
+
+def test_reset_slot_zeroes_one_slot():
+    """Cache-level: reset_slot zeroes exactly the reset slot's state and
+    cursor for every cache kind, list and stacked layouts."""
+    for name in ("qwen1.5-0.5b", "recurrentgemma-2b", "mamba2-2.7b"):
+        cfg = reduced(get_config(name))
+        # max_len 64 > local_window 32 so recurrentgemma gets ring buffers
+        caches = init_caches(cfg, 2, 64, per_slot_pos=True)
+        dirty = [jax.tree.map(jnp.ones_like, c) for c in caches]
+        wiped = reset_slot(dirty, 0)
+        for c in wiped:
+            for leaf in jax.tree.leaves(c):
+                assert bool((leaf[0] == 0).all()), (name, c.kind)
+                assert bool((leaf[1] == 1).all()), (name, c.kind)
+
+
+def test_host_sync_bound_structural(qwen):
+    """Chunked decode syncs at most ceil(tokens/chunk) + 1 times per
+    request; the host loop pays one sync per token."""
+    cfg, params = qwen
+    tokens, chunk = 13, 4
+    out, stats = _drain(cfg, params, "chunked", reqs=[([1, 2], tokens)],
+                        chunk_size=chunk)
+    assert len(out[0]) == tokens
+    assert stats["host_syncs"] <= math.ceil(tokens / chunk) + 1
+    assert stats["chunk_launches"] == math.ceil((tokens - 1) / chunk)
+    _, stats_h = _drain(cfg, params, "host", reqs=[([1, 2], tokens)])
+    assert stats_h["host_syncs"] == tokens  # prefill + (tokens-1) steps
+
+
+def test_eos_early_stop_both_modes(qwen):
+    """eos_id truncates at the first occurrence, identically in both
+    decode paths, and the eos token itself is emitted."""
+    cfg, params = qwen
+    full, _ = _drain(cfg, params, "chunked", reqs=[([1, 2, 3], 7)])
+    seq = full[0]
+    # pick an eos that first appears strictly inside the sequence
+    k, eos = next((i, t) for i, t in enumerate(seq)
+                  if 0 < i < len(seq) - 1 and t not in seq[:i])
+    for mode in ("chunked", "host"):
+        got, _ = _drain(cfg, params, mode, reqs=[([1, 2, 3], 7)], eos=eos)
+        assert got[0] == seq[:k + 1], mode
+
+
+# --------------------------------------------------- left-padding regression
+@pytest.mark.parametrize("window", [None, 8])
+def test_padded_prefill_matches_unpadded(qwen, window):
+    """A left-padded wave prefill (+3 decode steps) matches per-request
+    unpadded prefills bit-exactly: pad rows are masked out of the KV
+    cache via per-slot start offsets (full and ring cache layouts)."""
+    cfg, params = qwen
+    if window is not None:
+        cfg = dataclasses.replace(cfg, window=window)  # force ring buffers
+    prompts = [np.array([1, 2, 3, 4, 5]), np.array([7, 8]),
+               np.array([9, 9, 9])]
+    plen = max(len(p) for p in prompts)
+    toks = np.zeros((3, plen), np.int32)
+    pad = np.array([plen - len(p) for p in prompts], np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, plen - len(p):] = p
+    caches = init_caches(cfg, 3, 32)
+    nxt, caches = prefill(params, jnp.asarray(toks), caches, pos=0,
+                          cfg=cfg, pad=pad)
+    wave = [[int(nxt[i, 0])] for i in range(3)]
+    cur, pos = nxt, plen
+    for _ in range(3):
+        cur, caches = serve_step(params, cur, caches,
+                                 jnp.asarray(pos - pad), cfg=cfg)
+        pos += 1
+        for i in range(3):
+            wave[i].append(int(cur[i, 0]))
+    for i, p in enumerate(prompts):
+        c1 = init_caches(cfg, 1, 32)
+        n1, c1 = prefill(params, jnp.asarray(p)[None, :], c1, pos=0, cfg=cfg)
+        ref, cur1, pos1 = [int(n1[0, 0])], n1, len(p)
+        for _ in range(3):
+            cur1, c1 = serve_step(params, cur1, c1, jnp.int32(pos1), cfg=cfg)
+            pos1 += 1
+            ref.append(int(cur1[0, 0]))
+        assert wave[i] == ref, (window, i)
+
+
+def test_per_slot_cursors_reject_multi_token(qwen):
+    """Per-slot cache cursors are decode-only: a multi-token forward
+    must fail loudly, not corrupt slots (prefill goes through B=1 +
+    write_prompt)."""
+    cfg, params = qwen
+    caches = init_caches(cfg, 2, 32, per_slot_pos=True)
+    with pytest.raises(ValueError, match="per-slot"):
+        M.forward(params, cfg, tokens=jnp.ones((2, 3), jnp.int32),
+                  caches=caches, pos=0)
+
+
+# ------------------------------------------------------- serve_load family
+def _sim_spec(mode, rate=2000.0, **kw):
+    from repro.bench.serve import ServeLoadSpec
+
+    kw.setdefault("num_requests", 32)
+    kw.setdefault("batch_slots", 4)
+    kw.setdefault("out_tokens", (4, 24))
+    return ServeLoadSpec(name=f"serve_load.{mode}.rate{int(rate)}",
+                         mode=mode, rate_rps=rate, chunk_size=8, max_len=64,
+                         prompt_len=(4, 8), seed=0, **kw)
+
+
+def test_serve_trace_deterministic():
+    from repro.bench.serve import synth_trace
+
+    spec = _sim_spec("chunked")
+    assert synth_trace(spec) == synth_trace(spec)
+    other = dataclasses.replace(spec, seed=1)
+    assert synth_trace(other) != synth_trace(spec)
+
+
+def test_serve_sim_deterministic_and_chunked_wins():
+    """The discrete-event model is bit-deterministic, and the chunked
+    engine strictly beats the per-token host loop on decode throughput
+    and sync count at every traced load point."""
+    from benchmarks.bench_serve_load import RATES
+    from repro.bench.serve import simulate_serve_load
+
+    for rate in RATES:
+        host = simulate_serve_load(_sim_spec("host", rate)).metrics
+        chunked = simulate_serve_load(_sim_spec("chunked", rate)).metrics
+        again = simulate_serve_load(_sim_spec("chunked", rate)).metrics
+        assert chunked == again
+        assert chunked["throughput_tok_s"] > host["throughput_tok_s"], rate
+        assert chunked["tpot_s"]["p50"] < host["tpot_s"]["p50"], rate
+        assert (chunked["host_syncs_per_token"]
+                < host["host_syncs_per_token"]), rate
+        # the tentpole's sync arithmetic, exactly: one sync per prefill
+        # plus one per chunk launch / per decode step
+        assert chunked["host_syncs"] == (chunked["prefills"]
+                                         + chunked["chunk_launches"])
+        assert host["host_syncs"] == host["prefills"] + host["decode_steps"]
+
+
+def test_serve_sim_counters_match_real_engine(qwen):
+    """The simulator replays the engine's actual schedule: with every
+    arrival effectively immediate, its prefill/step/launch/sync counters
+    equal the real engine's stats on the same trace."""
+    from repro.bench.serve import simulate_serve_load, synth_trace
+
+    cfg, params = qwen
+    spec = _sim_spec("chunked", rate=1e9, num_requests=6,
+                     batch_slots=2, out_tokens=(2, 9))
+    sim = simulate_serve_load(spec).metrics
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=spec.max_len,
+                      chunk_size=spec.chunk_size)
+    rng = np.random.default_rng(0)
+    for r in synth_trace(spec):
+        eng.submit(rng.integers(1, cfg.vocab_size, size=r.prompt_len)
+                   .astype(np.int32), max_new_tokens=r.out_tokens)
+    eng.run()
+    for k in ("prefills", "decode_steps", "chunk_launches", "host_syncs",
+              "tokens_generated"):
+        assert sim[k] == eng.stats[k], k
+
+
+def test_serve_artifact_roundtrip_and_schema(tmp_path):
+    from repro.bench import read_bench_json, validate_artifact
+    from repro.bench.serve import (serve_artifact, simulate_serve_load,
+                                   write_serve_json)
+
+    res = simulate_serve_load(_sim_spec("chunked"))
+    path = write_serve_json(res, str(tmp_path))
+    doc = read_bench_json(path)
+    assert doc["kind"] == "serve_load" and doc["timer"] == "synthetic"
+    assert doc["scenario"]["mode"] == "chunked"
+    bad = serve_artifact(res)
+    bad["metrics"]["ttft_s"]["p50"] = "fast"
+    with pytest.raises(ValueError, match="ttft_s.p50"):
+        validate_artifact(bad)
+    bad2 = serve_artifact(res)
+    bad2["kind"] = "not_a_sweep"
+    with pytest.raises(ValueError, match="unknown kind"):
+        validate_artifact(bad2)
+    bad3 = serve_artifact(res)
+    del bad3["metrics"]["throughput_tok_s"]
+    with pytest.raises(ValueError, match="throughput_tok_s"):
+        validate_artifact(bad3)
+
+
+def test_serve_compare_gates():
+    """serve_load regression gate: slower throughput or fatter latency
+    tails fail; identity/timer/kind mismatches refuse to compare."""
+    import copy
+
+    from repro.bench import compare_artifacts
+    from repro.bench.serve import serve_artifact, simulate_serve_load
+
+    base = serve_artifact(simulate_serve_load(_sim_spec("chunked")))
+    assert compare_artifacts(base, copy.deepcopy(base)).ok
+
+    slow = copy.deepcopy(base)
+    slow["metrics"]["throughput_tok_s"] *= 0.5
+    res = compare_artifacts(base, slow)
+    assert not res.ok and any("throughput" in r for r in res.regressions)
+
+    tails = copy.deepcopy(base)
+    tails["metrics"]["ttft_s"]["p99"] *= 10
+    res = compare_artifacts(base, tails)
+    assert not res.ok and any("ttft_s.p99" in r for r in res.regressions)
+
+    other_timer = copy.deepcopy(base)
+    other_timer["timer"] = "wallclock"
+    assert any("timer changed" in r
+               for r in compare_artifacts(base, other_timer).regressions)
+
+    other_mode = copy.deepcopy(base)
+    other_mode["scenario"]["mode"] = "host"
+    assert any("scenario.mode" in r
+               for r in compare_artifacts(base, other_mode).regressions)
+
+    other_kind = copy.deepcopy(base)
+    other_kind["kind"] = "metg_sweep"
+    assert any("kind changed" in r
+               for r in compare_artifacts(base, other_kind).regressions)
+
+
+def test_committed_serve_baselines_show_the_tentpole_claim():
+    """The committed BENCH_serve_load.*.json snapshot itself must show
+    the chunked engine strictly outperforming the per-token host loop on
+    decode throughput (and sync count) at EVERY traced load point."""
+    from benchmarks.bench_serve_load import RATES
+    from repro.bench import read_bench_json
+
+    basedir = os.path.join(os.path.dirname(__file__), "..",
+                           "benchmarks", "baselines")
+
+    def doc(mode, rate):
+        return read_bench_json(os.path.join(
+            basedir, f"BENCH_serve_load.{mode}.rate{int(rate)}.json"))
+
+    for rate in RATES:
+        host, chunked = doc("host", rate), doc("chunked", rate)
+        assert host["timer"] == chunked["timer"] == "synthetic"
+        hm, cm = host["metrics"], chunked["metrics"]
+        assert cm["throughput_tok_s"] > hm["throughput_tok_s"], rate
+        assert cm["host_syncs_per_token"] < hm["host_syncs_per_token"], rate
+        assert cm["tpot_s"]["p50"] < hm["tpot_s"]["p50"], rate
