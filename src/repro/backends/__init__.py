@@ -15,7 +15,8 @@ The two shard_map backends share the ``repro.dist.collectives`` comm-
 planning layer (ring/halo/allgather modes, ragged-width padding).
 """
 from .base import (Backend, StackedProgramBackend, backend_names,
-                   get_backend, register_backend)
+                   canonical_backend_spec, get_backend, parse_backend_spec,
+                   register_backend)
 from .csp import CSPBackend, PlannedSPMDBackend
 from .dataflow import DataflowBackend
 from .host import HostBackend
@@ -27,7 +28,9 @@ __all__ = [
     "Backend",
     "StackedProgramBackend",
     "backend_names",
+    "canonical_backend_spec",
     "get_backend",
+    "parse_backend_spec",
     "register_backend",
     "CSPBackend",
     "DataflowBackend",

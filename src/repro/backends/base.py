@@ -44,6 +44,12 @@ def parse_backend_spec(spec: str) -> Tuple[str, Dict[str, object]]:
     Values parse as Python literals (``True``, ``4``, ``1.5``); bare
     words fall back to strings, so ``host-dynamic[schedule=steal]`` works
     without quoting.  A bare ``"name"`` parses to ``(name, {})``.
+
+    The returned kwargs are *canonicalized* — sorted by key — so two
+    spec strings that differ only in option order parse identically and
+    ``canonical_backend_spec`` renders them to the same string (option
+    order must never make two identical scenarios compare as different
+    in the ``--baseline`` gate).
     """
     m = _SPEC_RE.match(spec)
     if m is None:
@@ -76,7 +82,23 @@ def parse_backend_spec(spec: str) -> Tuple[str, Dict[str, object]]:
                 kwargs[k] = ast.literal_eval(v)
             except (ValueError, SyntaxError):
                 kwargs[k] = v  # bare word: a string (steal, a2a, ...)
-    return name, kwargs
+    return name, dict(sorted(kwargs.items()))
+
+
+def canonical_backend_spec(spec: str) -> str:
+    """The canonical rendering of a backend spec string.
+
+    Parses and re-renders with options sorted by key (bools/numbers in
+    Python spelling, strings as bare words), so key-reordered spellings
+    of the same spec — ``"x[a=1,b=2]"`` vs ``"x[b=2,a=1]"`` — map to one
+    identity.  ``bench.compare`` compares scenario backends through this
+    so a reordered baseline never reads as a vanished scenario.
+    """
+    name, kwargs = parse_backend_spec(spec)
+    if not kwargs:
+        return name
+    opts = ",".join(f"{k}={v}" for k, v in kwargs.items())
+    return f"{name}[{opts}]"
 
 
 def _check_ctor_kwargs(cls: Type["Backend"], name: str, kwargs: Dict) -> None:

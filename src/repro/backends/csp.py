@@ -25,6 +25,16 @@ run while compute proceeds.  The final timestep runs outside the scan
 (its payload needs no exchange), so both forms issue exactly H
 exchanges, and the exchanged values are identical — conformance is
 bit-exact either way.
+
+``comm="onesided"`` drops the rendezvous entirely (the NVSHMEM-style
+put/signal idiom): the scan carry holds the plan's receive buffers and
+signal counters (``CommPlan.onesided_state``), each step's producers
+push their dependency rows and raise the consumer's flag
+(``onesided_push``), and consumers assemble their context through the
+masked ``signal_wait_until`` (``onesided_wait``) instead of joining a
+collective.  Composes with ``comm_overlap`` (the wait for step t+1 is
+issued right after step t's push, ahead of the next kernel body) and
+with the combined multi-graph program; bit-exact with every other mode.
 """
 from __future__ import annotations
 
@@ -95,6 +105,45 @@ class PlannedSPMDBackend(Backend):
             # mark it so from the start (shard_map vma typing)
             payload0 = pcast(payload0, (self.axis,), to="varying")
             ts = jnp.arange(graph.height, dtype=jnp.uint32)
+
+            if plan.mode == "onesided":
+                recv0, sig0 = plan.onesided_state(Pels)
+                recv0 = pcast(recv0, (self.axis,), to="varying")
+                sig0 = pcast(sig0, (self.axis,), to="varying")
+
+                if plan.comm_overlap:
+                    # put/signal double buffering: step t pushes its
+                    # payload, then immediately issues step t+1's masked
+                    # wait — ahead of the next kernel body
+                    def step(carry, xs):
+                        ctx, recv, sig = carry
+                        t, mat_t, it_t = xs
+                        new = body.timestep(graph, t, ctx, mat_t, it_t,
+                                            cols=cols, dynamic=dynamic)
+                        recv, sig = plan.onesided_push(new, recv, sig)
+                        ctx = plan.onesided_wait(recv, sig, t + 1, new)
+                        return (ctx, recv, sig), None
+
+                    ctx0 = plan.onesided_wait(recv0, sig0, 0, payload0)
+                    (ctx, _, _), _ = jax.lax.scan(
+                        step, (ctx0, recv0, sig0),
+                        (ts[:-1], lmats_l[:-1], iters_l[:-1]))
+                    return body.timestep(graph, ts[-1], ctx, lmats_l[-1],
+                                         iters_l[-1], cols=cols,
+                                         dynamic=dynamic)
+
+                def step(carry, xs):
+                    payload, recv, sig = carry
+                    t, mat_t, it_t = xs
+                    ctx = plan.onesided_wait(recv, sig, t, payload)
+                    new = body.timestep(graph, t, ctx, mat_t, it_t,
+                                        cols=cols, dynamic=dynamic)
+                    recv, sig = plan.onesided_push(new, recv, sig)
+                    return (new, recv, sig), None
+
+                (final, _, _), _ = jax.lax.scan(
+                    step, (payload0, recv0, sig0), (ts, lmats_l, iters_l))
+                return final
 
             if plan.comm_overlap:
                 # double-buffered: the carry holds this step's already-
@@ -170,6 +219,60 @@ class PlannedSPMDBackend(Backend):
                       (self.axis,), to="varying")
                 for p, g in zip(plans, graphs))
             ts = jnp.arange(height, dtype=jnp.uint32)
+
+            if self.comm == "onesided":
+                # every graph's (recv, sig) rides the shared carry; each
+                # step pushes/waits all graphs, so one graph's puts may
+                # overlap another's kernels like the collective forms
+                states = tuple(
+                    tuple(pcast(s, (self.axis,), to="varying")
+                          for s in p.onesided_state(g.payload_elems))
+                    for p, g in zip(plans, graphs))
+
+                if self.comm_overlap:
+                    def step(carry, xs):
+                        t, mats_t, its_t = xs
+                        out = []
+                        for g, p, (ctx, recv, sig), m, it, cols, dyn in zip(
+                                graphs, plans, carry, mats_t, its_t,
+                                colss, dynamics):
+                            new = body.timestep(g, t, ctx, m, it,
+                                                cols=cols, dynamic=dyn)
+                            recv, sig = p.onesided_push(new, recv, sig)
+                            ctx = p.onesided_wait(recv, sig, t + 1, new)
+                            out.append((ctx, recv, sig))
+                        return tuple(out), None
+
+                    init = tuple(
+                        (p.onesided_wait(recv, sig, 0, c), recv, sig)
+                        for p, c, (recv, sig) in zip(plans, payloads, states))
+                    carry, _ = jax.lax.scan(
+                        step, init,
+                        (ts[:-1], tuple(m[:-1] for m in lmats_l),
+                         tuple(i[:-1] for i in iters_l)))
+                    return tuple(
+                        body.timestep(g, ts[-1], ctx, m[-1], it[-1],
+                                      cols=cols, dynamic=dyn)
+                        for g, (ctx, _, _), m, it, cols, dyn in zip(
+                            graphs, carry, lmats_l, iters_l, colss,
+                            dynamics))
+
+                def step(carry, xs):
+                    t, mats_t, its_t = xs
+                    out = []
+                    for g, p, (payload, recv, sig), m, it, cols, dyn in zip(
+                            graphs, plans, carry, mats_t, its_t,
+                            colss, dynamics):
+                        ctx = p.onesided_wait(recv, sig, t, payload)
+                        new = body.timestep(g, t, ctx, m, it,
+                                            cols=cols, dynamic=dyn)
+                        recv, sig = p.onesided_push(new, recv, sig)
+                        out.append((new, recv, sig))
+                    return tuple(out), None
+
+                init = tuple((c,) + s for c, s in zip(payloads, states))
+                carry, _ = jax.lax.scan(step, init, (ts, lmats_l, iters_l))
+                return tuple(payload for payload, _, _ in carry)
 
             if self.comm_overlap:
                 # as in _compile_one: the last tick runs outside the scan

@@ -36,6 +36,23 @@ shapes, int32 checksum math with the uint32 wrap-around base checksums
 precomputed host-side via ``TaskGraph.checksum_table``; see
 ``kernels/bodies.py``).  The memory / compute_mxu task kernels are
 validated in interpret mode only.
+
+``comm="onesided"`` adds the distributed form of the same idea: one
+*persistent, communicating* kernel per rank.  Columns are blocked over
+the device mesh with the ``CommPlan`` one-sided layout
+(``dist.collectives``, ``comm="onesided"``), and each rank's single
+``pallas_call`` (grid over timesteps) pushes its dependency rows
+straight into the consumers' receive buffers with
+``pltpu.make_async_remote_copy`` — the NVSHMEM put — and consumes its
+own inbox after a DMA-semaphore wait, the ``putmem_signal`` /
+``signal_wait_until`` pair.  No XLA collective appears anywhere in the
+lowering (``tests/test_megakernel.py`` pins that structurally): the
+rendezvous is gone, which is how modern runtimes reach µs-scale task
+granularity across ranks.  Every rank issues every put unconditionally
+(ring offsets cover all live pairs; dead pairs deliver rows no
+dependency-table entry references), keeping the DMA program
+SPMD-uniform — the structure both real RDMA hardware and the interpret
+emulation require.
 """
 from __future__ import annotations
 
@@ -46,10 +63,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
 from ..core.graph import CHECKSUM_MOD, TaskGraph
 from ..core.kernel_ref import mxu_weight
 from ..core.kernel_spec import MXU_DIM, KernelSpec
+from ..dist import collectives as CC
 from ..kernels import bodies
 from . import body
 from .base import StackedProgramBackend, register_backend
@@ -118,6 +139,120 @@ def _fused_kernel(idx_ref, mask_ref, iters_ref, base_ref, *rest,
     out_ref[...] = wave
 
 
+def _onesided_kernel(rank_ref, idx_ref, mask_ref, iters_ref, base_ref,
+                     sel_ref, *rest, kernel: KernelSpec, height: int,
+                     ndev: int, offsets, cap: int, max_iters: int):
+    """One grid step = one timestep of one *rank's* column block.
+
+    The persistent communicating kernel: dependency rows cross ranks via
+    remote DMA puts into ``rbuf`` (the receive buffers, scratch slot per
+    timestep × ring offset) with the DMA receive semaphore as the signal
+    — ``putmem_signal``/``signal_wait_until`` — never via an XLA
+    collective.  Refs:
+
+      rank:       (1, 1) int32 — this rank's index on the mesh axis
+      idx/mask:   (H, local, R) int32 — dep table in *context* coords
+                  ``[recv slots (n_off * cap) | local block]``
+      iters/base: (H, local, 1) int32
+      sel:        (n_off, cap, local) f32 one-hot — which of this rank's
+                  payload rows each put slot carries
+      out:        (local, P) f32 — the rank's payload wave
+      stage/rbuf: (H, n_off * cap, P) f32 scratch — send staging, inbox
+      send/recv_sem: (H, n_off) DMA semaphores
+    """
+    if kernel.kind == "compute_mxu":
+        w_ref, out_ref, *scratch = rest
+        mxu_w = w_ref[...]
+    else:
+        out_ref, *scratch = rest
+        mxu_w = None
+    n_off = len(offsets)
+    stage = rbuf = send_sem = recv_sem = None
+    if n_off:
+        stage, rbuf, send_sem, recv_sem = scratch
+    t = pl.program_id(0)
+    me = rank_ref[0, 0]
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    def put(ts, oi, off):
+        """The (ts, oi) put descriptor: my staged rows -> consumer's inbox."""
+        dst = jax.lax.rem(me + off, ndev)
+        return pltpu.make_async_remote_copy(
+            src_ref=stage.at[ts, oi * cap:(oi + 1) * cap],
+            dst_ref=rbuf.at[ts, oi * cap:(oi + 1) * cap],
+            send_sem=send_sem.at[ts, oi],
+            recv_sem=recv_sem.at[ts, oi],
+            device_id=dst,
+            device_id_type=pltpu.DeviceIdType.LOGICAL)
+
+    if n_off:
+        # signal_wait_until: epoch t-1's puts must have landed in our
+        # inbox (recv sem) and our own sends drained (send sem)
+        @pl.when(t > 0)
+        def _wait():
+            for oi, off in enumerate(offsets):
+                put(t - 1, oi, off).wait_recv()
+                put(t - 1, oi, off).wait_send()
+
+    prev_wave = out_ref[...]  # (local, P): t-1 payloads (zeros at t=0)
+    width = prev_wave.shape[0]
+    if n_off:
+        ctx = jnp.concatenate([rbuf[jnp.maximum(t - 1, 0)], prev_wave])
+    else:
+        ctx = prev_wave
+    ctx_w = ctx.shape[0]
+
+    # dependency combine exactly as the fused kernel, over the context
+    # window; slots of dead pairs / the unwritten t=0 inbox are never
+    # referenced by idx/mask, and the where() keeps their garbage out
+    prev_combined = jnp.transpose(ctx[:, 3:4])  # (1, ctx_w)
+    jcols = jax.lax.broadcasted_iota(jnp.int32, (width, ctx_w), 1)
+    idx = idx_ref[t]    # (local, R)
+    mask = mask_ref[t]  # (local, R)
+    acc = jnp.zeros((width, 1), jnp.int32)
+    for r in range(idx.shape[1]):
+        sel = (idx[:, r:r + 1] == jcols) & (mask[:, r:r + 1] != 0)
+        contrib = jnp.where(
+            sel, jnp.broadcast_to(prev_combined, (width, ctx_w)),
+            jnp.float32(0.0))
+        picked = contrib.sum(axis=1, keepdims=True).astype(jnp.int32)
+        acc = (acc + picked) % CHECKSUM_MOD
+
+    base = base_ref[t]
+    combined = (base + acc) % CHECKSUM_MOD
+    iters = iters_ref[t]
+    seed = acc.astype(jnp.float32) * jnp.float32(bodies.FOLD_BLOCK)
+    res = bodies.run_kernel_columns(kernel, iters, seed, max_iters,
+                                    mxu_w=mxu_w)  # (local, 1)
+
+    tcol = jnp.zeros((width, 1), jnp.float32) + t.astype(jnp.float32)
+    cols = (me * width
+            + jax.lax.broadcasted_iota(jnp.int32, (width, 1), 0)
+            ).astype(jnp.float32)
+    wave = jnp.concatenate(
+        [tcol, cols, base.astype(jnp.float32),
+         combined.astype(jnp.float32), res], axis=1)
+    payload_elems = prev_wave.shape[1]
+    if payload_elems > 5:
+        ballast = jnp.broadcast_to(res, (width, payload_elems - 5))
+        wave = jnp.concatenate([wave, ballast], axis=1)
+    out_ref[...] = wave
+
+    if n_off:
+        # the puts: every rank pushes to every active ring offset — the
+        # SPMD-uniform one-sided schedule (dead pairs carry masked rows)
+        @pl.when(t < height - 1)
+        def _put():
+            for oi, off in enumerate(offsets):
+                block = jnp.dot(sel_ref[oi], wave,
+                                preferred_element_type=jnp.float32)
+                stage[t, oi * cap:(oi + 1) * cap] = block
+                put(t, oi, off).start()
+
+
 @register_backend("pallas-fused")
 class MegakernelBackend(StackedProgramBackend):
     """Whole-graph fusion below the XLA dispatch floor."""
@@ -125,10 +260,20 @@ class MegakernelBackend(StackedProgramBackend):
     paradigm = "persistent fused kernel (single launch per graph batch)"
     dispatch_model = "per-launch"
 
-    def __init__(self, interpret: Optional[bool] = None):
+    def __init__(self, interpret: Optional[bool] = None,
+                 comm: Optional[str] = None):
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
+        if comm not in (None, "onesided"):
+            raise ValueError(
+                f"pallas-fused comm must be 'onesided' (or omitted for the "
+                f"single-device fused kernel), got {comm!r}")
         self.interpret = bool(interpret)
+        self.comm = comm
+        if comm == "onesided":
+            devs = np.array(jax.devices())
+            self.mesh = Mesh(devs, ("cols",))
+            self.ndev = len(devs)
 
     # -- table construction ------------------------------------------------
     @staticmethod
@@ -173,6 +318,134 @@ class MegakernelBackend(StackedProgramBackend):
             interpret=interpret,
         )
 
+    # -- one-sided (distributed) tables and program ------------------------
+    @staticmethod
+    def _onesided_tables(graph: TaskGraph, plan: CC.CommPlan):
+        """Per-rank static inputs for the communicating kernel.
+
+        The dep table is rebuilt in *context* coordinates from the plan's
+        ``local_mats`` (``[recv slots | local block]``), sliced per rank
+        on a leading mesh axis; ``sel`` is the one-hot put schedule (which
+        local payload rows each (offset, slot) put carries).
+        """
+        lm = plan.local_mats  # (H, padded, ctx) — plan coords, src-major
+        H, padded, _ = lm.shape
+        ndev, local, cap = plan.ndev, plan.local, plan.a2a_cap
+        offsets = ([off for off, _, _ in plan._onesided_offsets]
+                   if cap else [])
+        n_off = len(offsets)
+        oi_of = {off: oi for oi, off in enumerate(offsets)}
+        radix = max(1, int(lm.sum(-1).max()))
+        idx = np.zeros((ndev, H, local, radix), np.int32)
+        mask = np.zeros((ndev, H, local, radix), np.int32)
+        # remap plan context coords ([src-rank-major recv | local]) into
+        # the kernel's inbox coords ([ring-offset-major recv | local]):
+        # the put at offset ``off`` always lands in inbox slot block
+        # ``oi_of[off]``, whatever the source rank — which is what keeps
+        # every rank's DMA slices static and the schedule SPMD-uniform
+        for t, i in zip(*np.nonzero(lm.any(-1))):
+            d = i // local
+            ks = []
+            for c in np.nonzero(lm[t, i])[0]:
+                if c >= ndev * cap:  # the local block
+                    ks.append(n_off * cap + (c - ndev * cap))
+                else:
+                    s, k = c // cap, c % cap
+                    ks.append(oi_of[(d - s) % ndev] * cap + k)
+            idx[d, t, i - d * local, :len(ks)] = ks
+            mask[d, t, i - d * local, :len(ks)] = 1
+        base = np.zeros((H, padded), np.int64)
+        base[:, :graph.width] = graph.checksum_table()
+
+        def per_rank(a):  # (H, padded, X) -> (ndev, H, local, X)
+            return np.ascontiguousarray(
+                a.reshape(H, ndev, local, -1).transpose(1, 0, 2, 3))
+
+        sel = np.zeros((ndev, max(n_off, 1), max(cap, 1), local),
+                       np.float32)
+        for oi, (_, idx_tab, _) in enumerate(plan._onesided_offsets
+                                             if cap else []):
+            for r in range(ndev):
+                for k in range(cap):
+                    sel[r, oi, k, idx_tab[r, k]] = 1.0
+        tabs = (idx, mask,
+                per_rank(plan.iters[..., None].astype(np.int32)),
+                per_rank(base.astype(np.int32)[..., None]), sel)
+        if graph.kernel.kind == "compute_mxu":
+            tabs += (mxu_weight().astype(np.float32),)
+        return offsets, tabs
+
+    def _onesided_call(self, graph: TaskGraph, plan: CC.CommPlan,
+                       offsets: List[int], radix: int, interpret: bool):
+        """The per-rank single-launch pallas_call (grid over timesteps)."""
+        H, local, Pels = graph.height, plan.local, graph.payload_elems
+        cap, n_off = plan.a2a_cap, len(offsets)
+        whole = lambda shape: pl.BlockSpec(
+            shape, lambda t: (0,) * len(shape))
+        in_specs = [
+            # rank must live in SMEM: Mosaic needs a true scalar (not a
+            # vector lane) to compute the remote-DMA device_id
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            whole((H, local, radix)),
+            whole((H, local, radix)),
+            whole((H, local, 1)),
+            whole((H, local, 1)),
+            whole((max(n_off, 1), max(cap, 1), local)),
+        ]
+        if graph.kernel.kind == "compute_mxu":
+            in_specs.append(whole((MXU_DIM, MXU_DIM)))
+        scratch = []
+        if n_off:
+            scratch = [
+                pltpu.VMEM((H, n_off * cap, Pels), jnp.float32),  # stage
+                pltpu.VMEM((H, n_off * cap, Pels), jnp.float32),  # rbuf
+                pltpu.SemaphoreType.DMA((H, n_off)),
+                pltpu.SemaphoreType.DMA((H, n_off)),
+            ]
+        return pl.pallas_call(
+            functools.partial(
+                _onesided_kernel, kernel=graph.kernel, height=H,
+                ndev=plan.ndev, offsets=tuple(offsets), cap=cap,
+                max_iters=graph.kernel.iterations),
+            grid=(H,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((local, Pels), lambda t: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((local, Pels), jnp.float32),
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )
+
+    def _program_onesided(self, graphs: List[TaskGraph], interpret: bool):
+        """One persistent communicating kernel per rank per graph."""
+        mesh, ndev = self.mesh, self.ndev
+        ranks = jnp.arange(ndev, dtype=jnp.int32).reshape(ndev, 1)
+        shards, args = [], []
+        for g in graphs:
+            plan = CC.plan_comm(g, ndev, "cols", comm="onesided")
+            offsets, tabs = self._onesided_tables(g, plan)
+            radix = tabs[0].shape[-1]
+            call = self._onesided_call(g, plan, offsets, radix, interpret)
+            n_tabs = len(tabs)
+
+            def per_rank(rank, *tables, call=call, n_tabs=n_tabs):
+                sharded = [a[0] for a in tables[:4]] + [tables[4][0]]
+                if n_tabs > 5:
+                    sharded.append(tables[5])  # mxu weight, replicated
+                return call(rank, *sharded)
+
+            in_specs = (P("cols", None),) + (P("cols"),) * 5
+            if n_tabs > 5:
+                in_specs += (P(None, None),)
+            shards.append((shard_map(
+                per_rank, mesh=mesh, in_specs=in_specs,
+                out_specs=P("cols", None), check_vma=False), plan.width))
+            args.append((ranks,) + tuple(jnp.asarray(a) for a in tabs))
+
+        def program(all_args):
+            return [fn(*a)[:w] for (fn, w), a in zip(shards, all_args)]
+
+        return jax.jit(program), args
+
     # -- programs ----------------------------------------------------------
     def _program(self, graphs: List[TaskGraph], interpret: bool):
         """Independent graphs: one jit program, one launch per graph."""
@@ -204,11 +477,13 @@ class MegakernelBackend(StackedProgramBackend):
 
     # -- StackedProgramBackend hooks --------------------------------------
     def _build(self, graphs: Sequence[TaskGraph]):
+        if self.comm == "onesided":
+            return self._program_onesided(list(graphs), self.interpret)
         return self._program(list(graphs), self.interpret)
 
     def _build_stacked(self, graphs: Sequence[TaskGraph]):
-        if not body.stackable(graphs):
-            return None
+        if self.comm == "onesided" or not body.stackable(graphs):
+            return None  # onesided: per-graph rank programs, no stacking
         return self._program_stacked(list(graphs), self.interpret)
 
     def lowered_stablehlo(self, graphs: Sequence[TaskGraph],
@@ -217,7 +492,9 @@ class MegakernelBackend(StackedProgramBackend):
         count being pinned is a property of the Mosaic program, not of
         the CPU-CI interpret fallback."""
         graphs = list(graphs)
-        if body.stackable(graphs):
+        if self.comm == "onesided":
+            built = self._program_onesided(graphs, False)
+        elif body.stackable(graphs):
             built = self._program_stacked(graphs, False)
         else:
             built = self._program(graphs, False)

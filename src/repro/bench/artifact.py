@@ -9,12 +9,25 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
 from typing import Dict
 
 from .sweep import ScenarioResult
 
 SCHEMA_VERSION = 1
+
+
+def _canonical_backend(spec: str) -> str:
+    """Artifacts record the canonical backend spec (options sorted by
+    key) so artifact identity never depends on how a scenario author
+    ordered the options; unparseable specs record raw."""
+    from ..backends.base import canonical_backend_spec
+
+    try:
+        return canonical_backend_spec(spec)
+    except ValueError:
+        return spec
 
 # field name -> required type(s); None-able fields listed separately
 _POINT_FIELDS = {
@@ -84,7 +97,7 @@ def bench_artifact(result: ScenarioResult) -> Dict:
         "kind": "metg_sweep",
         "scenario": {
             "name": spec.name,
-            "backend": spec.backend,
+            "backend": _canonical_backend(spec.backend),
             "pattern": spec.pattern,
             "kernel": spec.kernel,
             "width": spec.width,
@@ -119,8 +132,13 @@ def bench_artifact(result: ScenarioResult) -> Dict:
 
 
 def _typed(v, t) -> bool:
-    """isinstance with bools rejected for numeric fields (bool <: int)."""
+    """isinstance with bools rejected for numeric fields (bool <: int)
+    and NaN/inf rejected for floats — a corrupt study artifact (e.g. a
+    degenerate-metric division leaking through) fails the schema check
+    here, not the CI gate arithmetic downstream."""
     if isinstance(v, bool):
+        return False
+    if isinstance(v, float) and not math.isfinite(v):
         return False
     return isinstance(v, t)
 

@@ -30,6 +30,20 @@ from .artifact import read_bench_json
 DEFAULT_THRESHOLD = 0.25  # relative slowdown tolerated before failing
 
 
+def _canonical_backend(spec: str) -> str:
+    """Backend identity for the diff: canonical spec when parseable.
+
+    Unparseable strings compare raw — a malformed baseline should fail
+    as a visible identity mismatch, not crash the gate.
+    """
+    from ..backends.base import canonical_backend_spec
+
+    try:
+        return canonical_backend_spec(spec)
+    except ValueError:
+        return spec
+
+
 def _rel_delta(baseline: float, current: float) -> float:
     if baseline == 0:
         return 0.0 if current == 0 else float("inf")
@@ -133,6 +147,12 @@ def compare_artifacts(baseline: Dict, current: Dict,
         return _compare_serve(baseline, current, rel_threshold, res)
     for key in ("name", "backend", "pattern", "kernel"):
         b, c = baseline["scenario"][key], current["scenario"][key]
+        if key == "backend":
+            # compare canonically: option order inside the spec string is
+            # not identity ("x[a=1,b=2]" == "x[b=2,a=1]"), so an old
+            # baseline written with reordered keys never reads as a
+            # changed (or vanished) scenario
+            b, c = _canonical_backend(b), _canonical_backend(c)
         if b != c:
             res.regressions.append(
                 f"scenario.{key} changed: baseline {b!r} vs current {c!r}")

@@ -7,8 +7,11 @@ curves as first-class scenario families:
 
 ``metg_payload``
     Payload-bytes sweep at fixed task granularity, per backend with
-    ``comm_overlap`` off ("blocking", strict MPI-style alternation) and
-    on ("overlap", double-buffered) — the paper Fig. 11/12 analogue.
+    ``comm_overlap`` off ("blocking", strict MPI-style alternation), on
+    ("overlap", double-buffered), and with one-sided put/signal
+    communication ("onesided", no rendezvous at all) — the paper
+    Fig. 11/12 analogue extended with the third point of the
+    communication-hiding spectrum.
 
 ``metg_imbalance``
     Imbalance-factor sweep for ``host-dynamic`` with its static column
@@ -39,6 +42,7 @@ mitigation factor
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass
 from typing import Dict, List, Mapping, Tuple
 
@@ -59,21 +63,42 @@ IMBALANCE_FACTORS: Tuple[float, ...] = (0.5, 1.0, 1.5, 2.0)
 STUDY_ITERATIONS = 64
 STUDY_WORKERS = 4
 SECONDS_PER_BYTE = 4e-9
+# rendezvous surcharge: what blocking/overlap pay per message for the
+# two-sided match (the one-sided variant's entire advantage in the model)
+SECONDS_PER_RENDEZVOUS = 2e-6
 # imbalance study: per-iteration work must dominate the dispatch overhead
 # or every wavefront is overhead-bound and no schedule can differentiate
 IMBALANCE_SECONDS_PER_ITERATION = 2e-6
 
-PAYLOAD_VARIANTS = ("blocking", "overlap")
+PAYLOAD_VARIANTS = ("blocking", "overlap", "onesided")
 IMBALANCE_VARIANTS = ("static", "steal")
+
+# what degenerate metric inputs (zero / negative / non-finite elapsed or
+# rate, e.g. a smoke run too small to time) collapse to instead of
+# raising or emitting inf — 0.0 reads as "no efficiency/mitigation
+# observed" and keeps downstream artifact arithmetic finite
+DEGENERATE_METRIC = 0.0
 
 
 def payload_spec(backend: str = "shardmap-csp", comm_overlap: bool = False,
-                 output_bytes: int = 16) -> ScenarioSpec:
-    """One ``metg_payload`` cell: fixed granularity, one payload size."""
-    variant = "overlap" if comm_overlap else "blocking"
+                 output_bytes: int = 16,
+                 variant: str | None = None) -> ScenarioSpec:
+    """One ``metg_payload`` cell: fixed granularity, one payload size.
+
+    ``variant`` selects the comm mode ("blocking" / "overlap" /
+    "onesided"); when omitted it is derived from ``comm_overlap`` for
+    backward compatibility with two-variant callers.
+    """
+    if variant is None:
+        variant = "overlap" if comm_overlap else "blocking"
+    if variant not in PAYLOAD_VARIANTS:
+        raise ValueError(f"unknown payload variant {variant!r}; "
+                         f"expected one of {PAYLOAD_VARIANTS}")
+    spec = (f"{backend}[comm=onesided]" if variant == "onesided"
+            else f"{backend}[comm_overlap={variant == 'overlap'}]")
     return ScenarioSpec(
         name=f"metg_payload.{backend}.{variant}.bytes{output_bytes}",
-        backend=f"{backend}[comm_overlap={comm_overlap}]",
+        backend=spec,
         pattern="stencil",
         width=8,
         height=16,
@@ -97,9 +122,10 @@ def imbalance_spec(schedule: str = "static",
 
 
 def payload_study_specs(backend: str = "shardmap-csp") -> List[ScenarioSpec]:
-    """Every ``metg_payload`` cell for one backend, blocking then overlap."""
-    return [payload_spec(backend, comm_overlap=ov, output_bytes=ob)
-            for ov in (False, True) for ob in PAYLOAD_BYTES]
+    """Every ``metg_payload`` cell for one backend, one block per variant
+    (blocking, overlap, onesided)."""
+    return [payload_spec(backend, output_bytes=ob, variant=v)
+            for v in PAYLOAD_VARIANTS for ob in PAYLOAD_BYTES]
 
 
 def imbalance_study_specs() -> List[ScenarioSpec]:
@@ -112,6 +138,7 @@ def imbalance_study_specs() -> List[ScenarioSpec]:
 
 def study_timer(timer: Timer | None, *, workers: int = 1,
                 seconds_per_byte: float = 0.0,
+                seconds_per_rendezvous: float = 0.0,
                 seconds_per_iteration: float | None = None) -> Timer | None:
     """Specialize a ``SyntheticTimer`` with study knobs.
 
@@ -121,8 +148,11 @@ def study_timer(timer: Timer | None, *, workers: int = 1,
     """
     if not isinstance(timer, SyntheticTimer):
         return timer
-    changes: Dict[str, object] = {"workers": workers,
-                                  "seconds_per_byte": seconds_per_byte}
+    changes: Dict[str, object] = {
+        "workers": workers,
+        "seconds_per_byte": seconds_per_byte,
+        "seconds_per_rendezvous": seconds_per_rendezvous,
+    }
     if seconds_per_iteration is not None:
         changes["seconds_per_iteration"] = seconds_per_iteration
     return dataclasses.replace(timer, **changes)
@@ -147,22 +177,34 @@ def observed_rate(result: ScenarioResult) -> float:
     return _single_point(result).rate
 
 
+def _guarded_ratio(num: float, den: float) -> float:
+    """``num / den`` clamped to finite: degenerate inputs (zero, negative,
+    NaN or inf — e.g. a smoke run too small to register any elapsed time)
+    collapse to ``DEGENERATE_METRIC`` instead of raising or propagating
+    inf into artifacts, where the schema check would reject them."""
+    if (not math.isfinite(num) or not math.isfinite(den)
+            or num <= 0 or den <= 0):
+        return DEGENERATE_METRIC
+    ratio = num / den
+    return ratio if math.isfinite(ratio) else DEGENERATE_METRIC
+
+
 def overlap_efficiency(ideal_s: float, observed_s: float) -> float:
-    """``ideal / observed``: 1.0 when added communication is fully hidden."""
-    if ideal_s <= 0 or observed_s <= 0:
-        raise ValueError(
-            f"elapsed times must be positive, got ideal={ideal_s}, "
-            f"observed={observed_s}")
-    return ideal_s / observed_s
+    """``ideal / observed``: 1.0 when added communication is fully hidden.
+
+    Degenerate inputs clamp to ``DEGENERATE_METRIC`` (see
+    ``_guarded_ratio``) so study arithmetic never emits NaN/inf.
+    """
+    return _guarded_ratio(ideal_s, observed_s)
 
 
 def mitigation_factor(balanced_rate: float, observed_rate: float) -> float:
-    """``observed / self-balanced`` rate: imbalance throughput retained."""
-    if balanced_rate <= 0 or observed_rate <= 0:
-        raise ValueError(
-            f"rates must be positive, got balanced={balanced_rate}, "
-            f"observed={observed_rate}")
-    return observed_rate / balanced_rate
+    """``observed / self-balanced`` rate: imbalance throughput retained.
+
+    Degenerate inputs clamp to ``DEGENERATE_METRIC`` (see
+    ``_guarded_ratio``) so study arithmetic never emits NaN/inf.
+    """
+    return _guarded_ratio(observed_rate, balanced_rate)
 
 
 @dataclass(frozen=True)

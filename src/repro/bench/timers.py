@@ -146,13 +146,23 @@ class SyntheticTimer:
         ``workers``, so the charged makespan always models the schedule
         the executor actually computed.
 
-    ``seconds_per_byte > 0``
+    ``seconds_per_byte > 0`` or ``seconds_per_rendezvous > 0``
         Each dependency moves ``output_bytes`` of payload; the per-graph
         communication term is ``ndeps * (seconds_per_dependency +
         output_bytes * seconds_per_byte)``.  Backends that double-buffer
         (``comm_overlap``) hide it behind compute — ``max(compute,
         comm)`` — while blocking backends pay ``compute + comm`` — the
         paper's §V-F communication-hiding axis.
+
+        ``seconds_per_rendezvous`` models the two-sided matching cost: a
+        per-dependency surcharge paid by every *rendezvous* comm mode
+        (the sender and receiver must meet at a collective, so each
+        message carries the synchronization latency).  One-sided
+        backends (``Backend.comm == "onesided"``) skip it — a put/signal
+        pair has no rendezvous — and their comm term is *always*
+        overlappable (``max(compute, comm)``): the producer's put
+        returns immediately and the consumer only spins on the signal
+        word when the data hasn't already landed.
 
     Backends whose class declares ``dispatch_model = "per-launch"`` (the
     fused megakernel) are charged a *per-launch* model instead: one
@@ -170,6 +180,7 @@ class SyntheticTimer:
     seconds_per_iteration: float = 50e-9
     seconds_per_dependency: float = 0.0
     seconds_per_byte: float = 0.0
+    seconds_per_rendezvous: float = 0.0
     workers: int = 1
     overhead_per_launch: float = 100e-6
     fused_overhead_per_task: float = 400e-9
@@ -191,9 +202,11 @@ class SyntheticTimer:
             wall += wavefront_makespan(costs, workers, policy)
         return wall
 
-    def _comm_seconds(self, g: TaskGraph) -> float:
+    def _comm_seconds(self, g: TaskGraph, onesided: bool = False) -> float:
         per_dep = (self.seconds_per_dependency
                    + g.output_bytes * self.seconds_per_byte)
+        if not onesided:
+            per_dep += self.seconds_per_rendezvous
         if per_dep <= 0:
             return 0.0
         return int(g.dependence_matrices().sum()) * per_dep
@@ -207,16 +220,20 @@ class SyntheticTimer:
                 + g.total_iterations() * self.seconds_per_iteration
                 for g in graphs)
         policy, overlap, workers = "serial", False, self.workers
-        if self.workers > 1 or self.seconds_per_byte > 0:
+        onesided = False
+        if (self.workers > 1 or self.seconds_per_byte > 0
+                or self.seconds_per_rendezvous > 0):
             be = cached_backend(self._backends, backend_name)
             policy = getattr(be, "sched_policy", "static")
             overlap = bool(getattr(be, "comm_overlap", False))
+            onesided = getattr(be, "comm", "auto") == "onesided"
             workers = int(getattr(be, "workers", self.workers))
         wall = 0.0
         for g in graphs:
             compute = self._compute_seconds(g, policy, workers)
-            comm = self._comm_seconds(g)
-            wall += max(compute, comm) if overlap else compute + comm
+            comm = self._comm_seconds(g, onesided)
+            wall += (max(compute, comm) if overlap or onesided
+                     else compute + comm)
         return wall
 
 

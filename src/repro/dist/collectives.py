@@ -29,12 +29,26 @@ into one reusable object, ``CommPlan``:
                         rank exactly the payload rows that rank's columns
                         depend on (MPI_Alltoallv analogue); send/recv counts
                         form a permutation — tokens are conserved
+  ``onesided``          NVSHMEM-style put/signal: producers *push* their
+                        dependency rows straight into per-consumer receive
+                        buffers and raise a signal flag; consumers spin on a
+                        ``signal_wait_until`` mask instead of joining a
+                        rendezvous.  Same per-pair slot layout as ``a2a``,
+                        but the receive buffers and signal counters persist
+                        across timesteps (scan state), so there is no
+                        collective barrier per step — the portable emulation
+                        moves each packet with a point-to-point ``ppermute``
+                        and carries the signal with the payload
   ====================  =====================================================
 
 ``CommPlan.exchange`` executes the planned movement *inside* ``shard_map``;
 ``CommPlan.local_mats`` are the dependence matrices re-indexed into each
 rank's context window (``[left halo | local block | right halo]`` for the
-ppermute modes, ``[recv buffers | local block]`` for ``a2a``).
+ppermute modes, ``[recv buffers | local block]`` for ``a2a``/``onesided``).
+For ``onesided`` the stateful form is primary: ``onesided_state`` builds
+the (receive buffers, signals) pair the executing scan carries,
+``onesided_push`` is the producer's put+signal, ``onesided_wait`` the
+consumer's masked ``signal_wait_until`` + context assembly.
 
 This module also owns the *dynamic* token all-to-all used by MoE expert
 parallelism (``TokenA2APlan``): the same dispatch planning — capacity
@@ -45,8 +59,9 @@ instead of statically by the dependence matrices.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,7 +69,7 @@ import numpy as np
 
 from ..core.graph import TaskGraph
 
-MODES = ("auto", "ring", "halo", "allgather", "a2a")
+MODES = ("auto", "ring", "halo", "allgather", "a2a", "onesided")
 
 
 def _dep_offsets(graph: TaskGraph) -> np.ndarray:
@@ -98,7 +113,7 @@ class CommPlan:
     and are sliced away by ``trim``.
     """
 
-    mode: str            # "ring" | "halo" | "allgather" | "a2a"
+    mode: str            # "ring" | "halo" | "allgather" | "a2a" | "onesided"
     axis: str            # mesh axis name the ranks live on
     ndev: int
     width: int           # real graph width
@@ -112,7 +127,7 @@ class CommPlan:
     # of t+1's kernel body), so XLA's async collectives may overlap with
     # compute.  Pure program-shape flag: ``exchange`` itself is identical.
     comm_overlap: bool = False
-    # a2a mode only: [src, dst] row counts and padded send-row indices
+    # a2a/onesided modes: [src, dst] row counts and padded send-row indices
     send_counts: Optional[np.ndarray] = None   # (ndev, ndev) int64
     a2a_cap: int = 0                           # rows per (src, dst) buffer
     a2a_send_idx: Optional[np.ndarray] = None  # (ndev, ndev, cap) int32
@@ -145,6 +160,12 @@ class CommPlan:
         """
         if self.mode == "allgather":
             return jax.lax.all_gather(payload, self.axis, tiled=True)
+        if self.mode == "onesided":
+            # stateless fallback (one-shot put + immediate wait); the
+            # executing backends carry (recv, sig) across steps instead
+            recv, sig = self.onesided_state(payload.shape[-1], payload.dtype)
+            recv, sig = self.onesided_push(payload, recv, sig)
+            return self.onesided_wait(recv, sig, 1, payload)
         if self.mode == "a2a":
             if self.a2a_cap == 0:
                 return payload  # no remote deps: context is the local block
@@ -171,6 +192,82 @@ class CommPlan:
     def trim(self, gathered):
         """Drop dead padding columns from a (padded_width, ...) output."""
         return gathered[: self.width]
+
+    # ------------------------------------------ onesided put/signal mode
+    @functools.cached_property
+    def _onesided_offsets(self) -> List[Tuple[int, np.ndarray, np.ndarray]]:
+        """Static transport schedule: one entry per *active* ring offset.
+
+        ``(offset, idx_table, flag_table)``: rank ``r`` puts the payload
+        rows ``idx_table[r]`` to rank ``(r + offset) % ndev`` and raises
+        the consumer's signal iff ``flag_table[r]`` (the pair is live).
+        Every rank executes every offset's put — the SPMD-uniform
+        structure one-sided hardware paths (remote DMA) require — and
+        dead pairs deliver masked garbage no ``local_mats`` entry reads.
+        """
+        assert self.mode == "onesided" and self.send_counts is not None
+        out: List[Tuple[int, np.ndarray, np.ndarray]] = []
+        for off in range(1, self.ndev):
+            dsts = (np.arange(self.ndev) + off) % self.ndev
+            live = self.send_counts[np.arange(self.ndev), dsts] > 0
+            if not live.any():
+                continue
+            idx = self.a2a_send_idx[np.arange(self.ndev), dsts]  # (ndev, cap)
+            out.append((off, idx.astype(np.int32),
+                        live.astype(np.float32)))
+        return out
+
+    def onesided_state(self, payload_elems: int, dtype=jnp.float32):
+        """Fresh (recv buffers, signal counters) for the executing scan.
+
+        ``recv[s]`` is the ``a2a_cap``-row buffer rank ``s`` puts into on
+        this rank; ``sig[s]`` counts the epochs rank ``s`` has signalled.
+        """
+        recv = jnp.zeros((self.ndev, self.a2a_cap, payload_elems), dtype)
+        sig = jnp.zeros((self.ndev,), jnp.int32)
+        return recv, sig
+
+    def onesided_push(self, payload, recv, sig):
+        """The producer side: put dependency rows into each consumer's
+        receive buffer and raise its signal (``put`` + ``putmem_signal``).
+
+        The portable emulation moves each (rows, flag) packet with one
+        point-to-point ``ppermute`` per active ring offset — the flag
+        travels *with* the payload, so the signal is genuinely raised by
+        the producer, not inferred by the consumer.  Slot writes use
+        ``.at[...].set(mode="drop")`` like the token-dispatch path.
+        """
+        if self.a2a_cap == 0:
+            return recv, sig
+        rank = jax.lax.axis_index(self.axis)
+        P = payload.shape[-1]
+        for off, idx_tab, flag_tab in self._onesided_offsets:
+            idx = jnp.take(jnp.asarray(idx_tab), rank, axis=0)   # (cap,)
+            block = jnp.take(payload, idx, axis=0)               # (cap, P)
+            flag = jnp.take(jnp.asarray(flag_tab), rank)
+            packet = jnp.concatenate(
+                [block, jnp.full((1, P), flag, block.dtype)])
+            perm = [(r, (r + off) % self.ndev) for r in range(self.ndev)]
+            got = jax.lax.ppermute(packet, self.axis, perm)
+            src = jax.lax.rem(rank - off + self.ndev, self.ndev)
+            recv = recv.at[src].set(got[:-1], mode="drop")
+            sig = sig.at[src].add(got[-1, 0].astype(jnp.int32), mode="drop")
+        return recv, sig
+
+    def onesided_wait(self, recv, sig, t, payload):
+        """The consumer side: ``signal_wait_until`` + context assembly.
+
+        Receive slots whose producer has not signalled epoch ``t`` yet
+        read as zeros (the masked wait) — which is also what makes the
+        mode bit-exact with blocking: dead pairs and the t=0 epoch are
+        masked instead of synchronized away.
+        """
+        if self.a2a_cap == 0:
+            return payload
+        ready = sig >= jnp.asarray(t).astype(sig.dtype)
+        slots = jnp.where(ready[:, None, None], recv, jnp.zeros_like(recv))
+        return jnp.concatenate(
+            [slots.reshape(self.ndev * self.a2a_cap, -1), payload])
 
 
 def _padded_static_inputs(graph: TaskGraph, padded: int):
@@ -200,8 +297,9 @@ def plan_comm(
     """Build the communication plan for ``graph`` over ``ndev`` ranks.
 
     ``comm`` forces a mode; ``auto`` picks the cheapest legal one (never
-    ``a2a``, which must be requested — its per-pair buffers only beat the
-    allgather when the dependence relation is sparse).  With
+    ``a2a`` or ``onesided``, which must be requested — per-pair buffers
+    only beat the allgather when the dependence relation is sparse, and
+    put/signal trades rendezvous latency for buffer space).  With
     ``prefer_ring`` (pipeline backends), graphs whose deps reach only
     toward lower columns use the one-directional ring instead of the
     bidirectional halo.  ``comm_overlap`` asks the executing backend for
@@ -237,8 +335,9 @@ def plan_comm(
                 f"{local} columns per rank; use allgather")
 
     mats, iters = _padded_static_inputs(graph, padded)
-    if mode == "a2a":
-        plan = _plan_a2a(graph, ndev, axis, mats, iters, padded, local)
+    if mode in ("a2a", "onesided"):
+        plan = _plan_a2a(graph, ndev, axis, mats, iters, padded, local,
+                         mode=mode)
         return dataclasses.replace(plan, comm_overlap=comm_overlap) \
             if comm_overlap else plan
     if mode == "allgather":
@@ -264,12 +363,16 @@ def plan_comm(
 
 def _plan_a2a(graph: TaskGraph, ndev: int, axis: str,
               mats: np.ndarray, iters: np.ndarray,
-              padded: int, local: int) -> CommPlan:
+              padded: int, local: int, mode: str = "a2a") -> CommPlan:
     """Per-pair dispatch plan: rank ``src`` sends rank ``dst`` exactly the
     payload columns ``dst``'s tasks read from ``src``'s block (union over
     timesteps, one plan reused per step like the halo modes).  Buffers are
     padded to the max pair count; unused send slots carry an arbitrary
     local row that no ``local_mats`` entry references.
+
+    ``onesided`` shares this slot layout byte-for-byte — only the
+    transport differs (producer puts + signals instead of the collective
+    ``all_to_all``), so conformance between the modes is structural.
     """
     H = graph.height
     t_idx, i_idx, j_idx = np.nonzero(mats)
@@ -300,7 +403,7 @@ def _plan_a2a(graph: TaskGraph, ndev: int, axis: str,
             else col_off[(r, j)]
         lmats[t, i, off] = 1
     return CommPlan(
-        mode="a2a", axis=axis, ndev=ndev, width=graph.width,
+        mode=mode, axis=axis, ndev=ndev, width=graph.width,
         padded_width=padded, local=local, halo=0, local_mats=lmats,
         iters=iters, send_counts=send_counts, a2a_cap=cap,
         a2a_send_idx=send_idx,

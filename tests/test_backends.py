@@ -107,6 +107,34 @@ def test_backend_spec_strings():
         get_backend("host-dynamic", schedule="nope")
 
 
+def test_backend_spec_canonicalization():
+    """Option order inside the spec string is never identity: the parsed
+    kwargs come back key-sorted and canonical_backend_spec renders
+    key-reordered spellings to one string."""
+    from repro.backends.base import canonical_backend_spec, parse_backend_spec
+
+    a = parse_backend_spec("host-dynamic[workers=2,schedule=steal]")
+    b = parse_backend_spec("host-dynamic[schedule=steal,workers=2]")
+    assert a == b
+    assert list(a[1]) == ["schedule", "workers"]  # key-sorted
+    assert (canonical_backend_spec("host-dynamic[workers=2,schedule=steal]")
+            == canonical_backend_spec("host-dynamic[schedule=steal,workers=2]")
+            == "host-dynamic[schedule=steal,workers=2]")
+    # bare names and single options render unchanged, values in the
+    # spelling that re-parses to the same kwargs
+    assert canonical_backend_spec("xla-scan") == "xla-scan"
+    spec = canonical_backend_spec(
+        "shardmap-csp[comm_overlap=True,comm=onesided]")
+    assert spec == "shardmap-csp[comm=onesided,comm_overlap=True]"
+    assert parse_backend_spec(spec) == parse_backend_spec(
+        "shardmap-csp[comm_overlap=True,comm=onesided]")
+    with pytest.raises(ValueError, match="malformed"):
+        canonical_backend_spec("x[[")
+    # the canonical spec still resolves to the same backend configuration
+    be = get_backend(spec)
+    assert be.comm == "onesided" and be.comm_overlap is True
+
+
 def test_backend_spec_rejects_duplicate_keys():
     """A spec that sets the same option twice is a typo'd scenario, not a
     last-wins preference — the error names the key and the full spec."""

@@ -400,6 +400,63 @@ def test_compare_rejects_identity_mismatch_and_missing_points():
     assert any("timer changed" in r for r in res.regressions)
 
 
+def test_compare_canonicalizes_backend_spec_key_order():
+    """A baseline written with reordered backend-spec options is the SAME
+    scenario: the differ must compare canonically, not raw-text — a
+    key-reordered baseline tripping 'scenario.backend changed' would
+    poison the whole --baseline gate for that scenario."""
+    from repro.bench import compare_artifacts
+
+    base, cur = _doc(), _doc()
+    base["scenario"]["backend"] = \
+        "shardmap-csp[comm_overlap=True,comm=onesided]"
+    cur["scenario"]["backend"] = \
+        "shardmap-csp[comm=onesided,comm_overlap=True]"
+    assert compare_artifacts(base, cur, rel_threshold=0.25).ok
+    # a genuinely different backend still refuses
+    cur["scenario"]["backend"] = "shardmap-csp[comm=onesided]"
+    res = compare_artifacts(base, cur, rel_threshold=0.25)
+    assert any("scenario.backend changed" in r for r in res.regressions)
+    # unparseable baseline specs fall back to raw-text comparison (a
+    # visible identity mismatch, not a crash)
+    base["scenario"]["backend"] = "garbage[[["
+    cur["scenario"]["backend"] = "garbage[[["
+    assert compare_artifacts(base, cur, rel_threshold=0.25).ok
+
+
+def test_artifact_records_canonical_backend_spec():
+    """bench_artifact writes the canonical spec, so artifact identity
+    never depends on how the scenario author ordered the options."""
+    spec = ScenarioSpec(
+        name="artifact/canon v1", pattern="trivial", width=4, height=8,
+        backend="shardmap-csp[comm_overlap=False,comm=onesided]",
+        sweep=SweepControls(iterations_hi=64, n_points=2))
+    doc = bench_artifact(run_scenario(spec, timer=SyntheticTimer()))
+    assert doc["scenario"]["backend"] == \
+        "shardmap-csp[comm=onesided,comm_overlap=False]"
+
+
+def test_artifact_validation_rejects_nonfinite_numbers():
+    """NaN/inf in any numeric field is corruption (e.g. a degenerate
+    study division leaking through) and must fail the schema check, not
+    the CI gate arithmetic downstream."""
+    doc = bench_artifact(_tiny_result())
+    validate_artifact(doc)
+    for breakage in ({"threshold": float("nan")},
+                     {"peak_rate": float("inf")},
+                     {"metg_s": float("-inf")}):
+        with pytest.raises(ValueError):
+            validate_artifact({**doc, **breakage})
+    bad = json.loads(json.dumps(doc))
+    bad["points"][0]["wall_time_s"] = float("nan")
+    with pytest.raises(ValueError, match="wall_time_s"):
+        validate_artifact(bad)
+    bad = json.loads(json.dumps(doc))
+    bad["points"][0]["efficiency"] = float("inf")
+    with pytest.raises(ValueError, match="efficiency"):
+        validate_artifact(bad)
+
+
 def test_compare_dirs_and_run_baseline_gate(tmp_path):
     """End-to-end --baseline contract: identical dirs pass, a slowed
     scenario or a vanished artifact fails, a new artifact is ignored."""
@@ -597,6 +654,40 @@ def test_comm_overlap_never_slower_on_fake_clock():
             assert elapsed_s(on) < elapsed_s(off), (backend, ob)
 
 
+def test_onesided_timer_model_closed_form():
+    """The rendezvous surcharge is charged per dependency for the
+    two-sided modes and skipped for comm="onesided", whose comm term is
+    always overlappable (max(compute, comm)) even with comm_overlap off
+    — the fake clock's model of put/signal with no matching step."""
+    from repro.core import make_graph
+
+    g = make_graph(width=8, height=16, pattern="stencil", iterations=64,
+                   output_bytes=4096)
+    ndeps = int(g.dependence_matrices().sum())
+    t = SyntheticTimer(seconds_per_byte=4e-9, seconds_per_rendezvous=2e-6)
+    compute = (g.num_tasks * t.overhead_per_task
+               + g.total_iterations() * t.seconds_per_iteration)
+    per_byte = g.output_bytes * t.seconds_per_byte
+    blocking = t.measure("shardmap-csp[comm_overlap=False]", [g])
+    assert blocking == pytest.approx(
+        compute + ndeps * (per_byte + t.seconds_per_rendezvous), rel=1e-12)
+    overlap = t.measure("shardmap-csp[comm_overlap=True]", [g])
+    assert overlap == pytest.approx(
+        max(compute, ndeps * (per_byte + t.seconds_per_rendezvous)),
+        rel=1e-12)
+    onesided = t.measure("shardmap-csp[comm=onesided]", [g])
+    assert onesided == pytest.approx(max(compute, ndeps * per_byte),
+                                     rel=1e-12)
+    assert onesided <= overlap <= blocking
+    # rendezvous alone (no per-byte cost) also reaches the backend hints
+    t2 = SyntheticTimer(seconds_per_rendezvous=2e-6)
+    assert t2.measure("shardmap-csp[comm_overlap=False]", [g]) == \
+        pytest.approx(compute + ndeps * t2.seconds_per_rendezvous,
+                      rel=1e-12)
+    assert t2.measure("shardmap-csp[comm=onesided]", [g]) == \
+        pytest.approx(compute, rel=1e-12)
+
+
 def test_committed_study_baselines_show_the_tentpole_claims():
     """The acceptance numbers must be visible in the committed
     benchmarks/baselines/ snapshot itself: the stealing schedule's
@@ -617,21 +708,46 @@ def test_committed_study_baselines_show_the_tentpole_claims():
         return obs["rate"] / bal["rate"]
 
     assert mitigation("steal", 2.0) > mitigation("static", 2.0)
-    from repro.bench.studies import PAYLOAD_BYTES
-    for ob in PAYLOAD_BYTES:
-        blocking = point(f"metg_payload.shardmap-csp.blocking.bytes{ob}")
-        overlap = point(f"metg_payload.shardmap-csp.overlap.bytes{ob}")
-        assert overlap["wall_time_s"] <= blocking["wall_time_s"], ob
+    from repro.bench.studies import PAYLOAD_BYTES, overlap_efficiency
+    for backend in ("shardmap-csp", "shardmap-pipeline"):
+        smallest = min(PAYLOAD_BYTES)
+        ideal = {v: point(f"metg_payload.{backend}.{v}.bytes{smallest}")
+                 for v in ("blocking", "overlap", "onesided")}
+        for ob in PAYLOAD_BYTES:
+            blocking = point(f"metg_payload.{backend}.blocking.bytes{ob}")
+            overlap = point(f"metg_payload.{backend}.overlap.bytes{ob}")
+            onesided = point(f"metg_payload.{backend}.onesided.bytes{ob}")
+            assert overlap["wall_time_s"] <= blocking["wall_time_s"], ob
+            assert onesided["wall_time_s"] <= overlap["wall_time_s"], ob
+            # the one-sided acceptance claim: its modeled overlap
+            # efficiency >= the double-buffered variant's at EVERY point
+            eff = {v: overlap_efficiency(ideal[v]["wall_time_s"],
+                                         p["wall_time_s"])
+                   for v, p in (("overlap", overlap),
+                                ("onesided", onesided))}
+            assert eff["onesided"] >= eff["overlap"], (backend, ob)
 
 
 def test_study_curve_builders_validate_inputs():
-    from repro.bench.studies import (imbalance_spec, mitigation_curve,
-                                     mitigation_factor, overlap_efficiency)
+    from repro.bench.studies import (DEGENERATE_METRIC, imbalance_spec,
+                                     mitigation_curve, mitigation_factor,
+                                     overlap_efficiency)
 
-    with pytest.raises(ValueError, match="positive"):
-        overlap_efficiency(0.0, 1.0)
-    with pytest.raises(ValueError, match="positive"):
-        mitigation_factor(0.0, 1.0)
+    # degenerate inputs clamp to the documented sentinel (never raise,
+    # never emit inf/NaN — smoke runs can legitimately measure 0.0s)
+    assert overlap_efficiency(0.0, 1.0) == DEGENERATE_METRIC
+    assert overlap_efficiency(1.0, 0.0) == DEGENERATE_METRIC
+    assert overlap_efficiency(float("inf"), 1.0) == DEGENERATE_METRIC
+    assert overlap_efficiency(float("nan"), 1.0) == DEGENERATE_METRIC
+    assert overlap_efficiency(1.0, 5e-324) == DEGENERATE_METRIC  # -> inf
+    assert mitigation_factor(0.0, 1.0) == DEGENERATE_METRIC
+    assert mitigation_factor(1.0, float("inf")) == DEGENERATE_METRIC
+    assert mitigation_factor(-1.0, 1.0) == DEGENERATE_METRIC
+    import math
+    assert math.isfinite(DEGENERATE_METRIC)
+    # well-formed inputs still compute the plain ratio
+    assert overlap_efficiency(1.0, 2.0) == 0.5
+    assert mitigation_factor(2.0, 1.0) == 0.5
     # mitigation needs the balanced baseline cell
     res = run_scenario(imbalance_spec(schedule="steal", imbalance=1.5),
                        timer=SyntheticTimer())

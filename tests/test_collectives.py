@@ -187,6 +187,102 @@ def test_a2a_mode_must_be_requested_and_handles_degenerates():
     assert pr.ragged and (pr.local_mats[:, 10:] == 0).all()
 
 
+# -------------------------------------------------- one-sided mode layout
+def _check_onesided_exactly_once(g, ndev):
+    """The put/signal layout contract, brute-forced from g.deps:
+
+    * ring covering — every live (src, dst) pair is served by exactly one
+      ring offset, dead pairs by none;
+    * slot injectivity — each pair's live put slots carry distinct local
+      rows, exactly ``send_counts`` of them;
+    * delivery — every dependency of every task resolves through exactly
+      one context slot (recv slot for remote producers, local block
+      otherwise), and no slot delivers a column the task doesn't need.
+    """
+    plan = CC.plan_comm(g, ndev, "cols", comm="onesided")
+    assert plan.mode == "onesided"
+    cap, local = plan.a2a_cap, plan.local
+    served = {}
+    for off, idx_tab, live in plan._onesided_offsets:
+        for s in range(ndev):
+            d = (s + off) % ndev
+            if plan.send_counts[s, d] > 0:
+                assert live[s] == 1.0, (s, d, off)
+                assert (s, d) not in served  # one offset per pair
+                served[(s, d)] = idx_tab[s]
+            else:
+                assert live[s] == 0.0, (s, d, off)
+    assert set(served) == {(s, d)
+                           for s in range(ndev) for d in range(ndev)
+                           if plan.send_counts[s, d] > 0}
+    for (s, d), rows in served.items():
+        n = int(plan.send_counts[s, d])
+        assert len(set(rows[:n].tolist())) == n  # injective live prefix
+        np.testing.assert_array_equal(rows, plan.a2a_send_idx[s, d])
+        assert ((rows >= 0) & (rows < local)).all()
+    # dead padded columns neither produce nor consume
+    assert (plan.local_mats[:, g.width:] == 0).all()
+    for t in range(g.height):
+        for i in range(g.width):
+            d = i // local
+            got = []
+            for c in np.nonzero(plan.local_mats[t, i])[0]:
+                if c >= ndev * cap:  # the local block
+                    got.append(d * local + (c - ndev * cap))
+                else:  # recv slot: decode via the put schedule
+                    s, k = c // cap, c % cap
+                    assert k < plan.send_counts[s, d], (t, i, s, k)
+                    got.append(s * local + int(plan.a2a_send_idx[s, d, k]))
+            assert sorted(got) == sorted(g.deps(t, i)), (t, i)
+
+
+@pytest.mark.parametrize("ndev", [1, 2, 4, 8])
+def test_onesided_layout_delivers_each_dep_exactly_once(ndev):
+    """Exhaustive deterministic sweep of the property: widths 1-16 over
+    1/2/4/8 ranks for stencil, plus the densest patterns at mixed
+    widths."""
+    for width in range(1, 17):
+        g = make_graph(width=width, height=6, pattern="stencil",
+                       iterations=1)
+        _check_onesided_exactly_once(g, ndev)
+    for pattern, kw in [("fft", {}), ("spread", {"radix": 3}),
+                        ("random", {}), ("sweep", {})]:
+        for width in (3, 10, 16):
+            g = make_graph(width=width, height=6, pattern=pattern,
+                           iterations=1, **kw)
+            _check_onesided_exactly_once(g, ndev)
+
+
+def test_onesided_layout_property_randomized():
+    """The same contract under hypothesis-driven (width, ndev, pattern,
+    seed) sampling — catches layout corners the grid above misses."""
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(width=st.integers(1, 16), ndev=st.sampled_from([1, 2, 4, 8]),
+           pattern=st.sampled_from(["stencil", "sweep", "fft", "random"]),
+           seed=st.integers(0, 3))
+    def check(width, ndev, pattern, seed):
+        g = make_graph(width=width, height=5, pattern=pattern,
+                       iterations=1, seed=seed)
+        _check_onesided_exactly_once(g, ndev)
+
+    check()
+
+
+def test_onesided_plan_shares_a2a_accounting():
+    """One-sided reuses the a2a slot accounting: same counts, same cap,
+    same sorted-column send schedule — only the transport differs."""
+    g = make_graph(width=12, height=6, pattern="stencil", iterations=1)
+    a2a = CC.plan_comm(g, 4, "cols", comm="a2a")
+    one = CC.plan_comm(g, 4, "cols", comm="onesided")
+    np.testing.assert_array_equal(one.send_counts, a2a.send_counts)
+    np.testing.assert_array_equal(one.a2a_send_idx, a2a.a2a_send_idx)
+    np.testing.assert_array_equal(one.local_mats, a2a.local_mats)
+    assert one.a2a_cap == a2a.a2a_cap
+
+
 def test_a2a_forced_execution_matches_oracle():
     """The a2a exchange path through the CSP backend (1 device here; the
     8-rank version lives in test_distributed.py)."""

@@ -122,6 +122,9 @@ STUDY_MODE_BACKENDS = (
     "host-dynamic[schedule=steal]",
     "shardmap-csp[comm_overlap=True]",
     "shardmap-pipeline[comm_overlap=True]",
+    "shardmap-csp[comm=onesided]",
+    "shardmap-csp[comm=onesided,comm_overlap=True]",
+    "shardmap-pipeline[comm=onesided]",
 )
 
 
