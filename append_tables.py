@@ -5,8 +5,9 @@ after it is machine-written; text above survives):
 
 * ``append_metg_tables`` — the paper-style METG(50%) summary (backend x
   case, one table per scenario family) aggregated from the
-  ``BENCH_*.json`` artifacts a sweep wrote.  Wired to
-  ``benchmarks/run.py --tables``.
+  ``BENCH_*.json`` artifacts a sweep wrote, plus the committed
+  auto-backend tuning winners (``benchmarks/tuning/TUNE_*.json``).
+  Wired to ``benchmarks/run.py --tables``.
 * ``append_dryrun_tables`` — the legacy roofline tables from
   ``results/dryrun.json`` (production-mesh studies).
 """
@@ -114,6 +115,40 @@ def render_serve_summary(docs: List[Dict]) -> str:
     return "\n".join(out)
 
 
+def render_tuning_summary(tuning_dir: str = "benchmarks/tuning") -> str:
+    """Markdown table of the committed planner winners: one row per
+    tuning key, grouped by family (what ``get_backend("auto")``
+    dispatches where, and by how much the winner beat the runner-up).
+    Empty string when no committed table exists."""
+    from repro.bench.tuner import (TuningKey, key_order, key_slug,
+                                   read_tuning_json, tuning_table_path)
+
+    path = tuning_table_path(tuning_dir)
+    if not os.path.exists(path):
+        return ""
+    doc = read_tuning_json(path)
+    by_family: Dict[str, List[Dict]] = defaultdict(list)
+    for e in doc["entries"]:
+        by_family[e["family"]].append(e)
+    out = [
+        f"\n### Auto-backend tuning winners — timer {doc['timer']} "
+        f"(`get_backend(\"auto\")` dispatch table; margin = cost of the "
+        f"next-best distinct candidate)\n",
+    ]
+    for fam in sorted(by_family):
+        out.append(f"\n#### {fam}\n")
+        out.append("| tuning key | winner | elapsed (µs) | margin |")
+        out.append("|---|---|---|---|")
+        entries = sorted(by_family[fam],
+                         key=lambda e: key_order(TuningKey(**e["key"])))
+        for e in entries:
+            out.append(
+                f"| {key_slug(TuningKey(**e['key']))} | `{e['winner']}` "
+                f"| {e['elapsed_s'] * 1e6:.2f} | +{e['margin']:.1%} |")
+        out.append("")
+    return "\n".join(out)
+
+
 def _splice(md_path: str, body: str) -> str:
     """Replace everything after the marker with ``body`` (creating the
     file, or the marker section, when missing)."""
@@ -130,16 +165,22 @@ def _splice(md_path: str, body: str) -> str:
 
 
 def append_metg_tables(artifacts_dir: str,
-                       md_path: str = "EXPERIMENTS.md") -> str:
+                       md_path: str = "EXPERIMENTS.md",
+                       tuning_dir: str = None) -> str:
     """Aggregate ``BENCH_*.json`` under ``artifacts_dir`` into the METG
-    summary and splice it into ``md_path``; returns the path written."""
+    summary (plus the committed auto-backend tuning winners) and splice
+    it into ``md_path``; returns the path written."""
     docs = load_metg_artifacts(artifacts_dir)
     if not docs:
         raise ValueError(
             f"no valid BENCH_*.json artifacts in {artifacts_dir!r}")
+    if tuning_dir is None:
+        tuning_dir = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)),
+            "benchmarks", "tuning")
     return _splice(md_path,
                    render_metg_summary(docs) + render_serve_summary(docs)
-                   + "\n")
+                   + render_tuning_summary(tuning_dir) + "\n")
 
 
 def append_dryrun_tables(dryrun_json: str = "results/dryrun.json",

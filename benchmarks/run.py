@@ -26,8 +26,18 @@ the paper:
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One:     ``PYTHONPATH=src python -m benchmarks.run --only bench_metg_deps``
+(``--only`` entries are validated against the registry above — a typo'd
+module name exits nonzero instead of silently running zero benchmarks.)
 Smoke (CI): ``... --smoke`` — tiny sweeps, one repeat, shallow graphs;
 smoke is a parameter of each scenario's ``SweepControls``, not a global.
+
+Tuning: ``--tune`` regenerates the backend-planner table consumed by
+``get_backend("auto")`` (``repro.bench.tuner``) instead of running bench
+modules — commit it with
+``python -m benchmarks.run --tune --timer synthetic --artifacts
+benchmarks/tuning``; ``--tune-baseline benchmarks/tuning`` diffs a
+regenerated table against the committed one (CI runs this on the
+``--smoke`` reduced grid, a strict key-subset of the full table).
 
 Regression gate: ``--baseline <dir>`` diffs every written artifact against
 the committed snapshot (``repro.bench.compare``) and exits nonzero when a
@@ -58,6 +68,53 @@ MODULES = [
 ]
 
 
+def _run_tune(args) -> None:
+    """``--tune``: regenerate the backend-planner tuning table.
+
+    Races every legal backend/mode spec on the selected timer over the
+    tuning corpus (reduced grid under ``--smoke``), writes the validated
+    ``TUNE_default.json`` into ``--artifacts``, and — with
+    ``--tune-baseline`` — diffs it against the committed table in the
+    same spirit as the ``--baseline`` bench gate: a changed winner at a
+    shared key exits nonzero, keys the reduced grid did not retune are
+    non-fatal notes.
+    """
+    from repro.bench import SyntheticTimer, WallClockTimer
+    from repro.bench.tuner import (TuningKey, build_tuning_table,
+                                   diff_tuning_tables, key_slug,
+                                   read_tuning_json, tuning_table_path,
+                                   write_tuning_json)
+
+    timer = (SyntheticTimer() if args.timer == "synthetic"
+             else WallClockTimer())
+    doc = build_tuning_table(timer=timer, smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for e in doc["entries"]:
+        print(f"tune.{key_slug(TuningKey(**e['key']))},"
+              f"{e['elapsed_s'] * 1e6:.3f},"
+              f"winner={e['winner']} margin=+{e['margin']:.1%} "
+              f"candidates={len(e['candidates'])}", flush=True)
+    path = write_tuning_json(doc, args.artifacts)
+    print(f"artifact,0,{path}", flush=True)
+
+    fatal = []
+    if args.tune_baseline:
+        bpath = args.tune_baseline
+        if os.path.isdir(bpath):
+            bpath = tuning_table_path(bpath)
+        fatal, notes = diff_tuning_tables(read_tuning_json(bpath), doc,
+                                          subset_ok=args.smoke)
+        for n in notes:
+            print(f"tune-diff,0,{n}", flush=True)
+        for f in fatal:
+            print(f"tune-diff,0,FATAL {f}", flush=True)
+        print(f"tune-diff,0,"
+              + (f"{len(fatal)} fatal difference(s)" if fatal
+                 else "winners match the committed table"), flush=True)
+    if fatal:
+        sys.exit(1)
+
+
 def main(argv=None) -> None:
     from .common import BenchContext
 
@@ -85,6 +142,16 @@ def main(argv=None) -> None:
                          "to --tables-file (via append_tables.py)")
     ap.add_argument("--tables-file", default="EXPERIMENTS.md",
                     help="markdown file --tables appends to")
+    ap.add_argument("--tune", action="store_true",
+                    help="regenerate the backend-planner tuning table "
+                         "(repro.bench.tuner) instead of running bench "
+                         "modules: races the legal backend/mode space on "
+                         "the selected timer and writes TUNE_default.json "
+                         "into --artifacts; --smoke tunes the reduced grid")
+    ap.add_argument("--tune-baseline", default=None,
+                    help="committed tuning table (TUNE_*.json file or its "
+                         "directory) to diff the regenerated table "
+                         "against; a changed winner exits nonzero")
     args = ap.parse_args(argv)
     if args.baseline and not args.artifacts:
         ap.error("--baseline requires --artifacts (the current run's "
@@ -92,7 +159,29 @@ def main(argv=None) -> None:
     if args.tables and not args.artifacts:
         ap.error("--tables requires --artifacts (the tables aggregate "
                  "the written artifacts)")
-    mods = args.only.split(",") if args.only else MODULES
+    if args.tune_baseline and not args.tune:
+        ap.error("--tune-baseline requires --tune (there is no current "
+                 "table to diff otherwise)")
+    if args.tune:
+        if args.only:
+            ap.error("--tune runs the planner sweep, not bench modules; "
+                     "drop --only")
+        if not args.artifacts:
+            ap.error("--tune requires --artifacts (where TUNE_*.json "
+                     "is written)")
+        _run_tune(args)
+        return
+    mods = MODULES
+    if args.only:
+        mods = [m.strip() for m in args.only.split(",") if m.strip()]
+        unknown = sorted(set(mods) - set(MODULES))
+        if unknown or not mods:
+            # a misspelled module silently running ZERO benchmarks (and
+            # exiting 0, green-lighting CI) is the failure mode here —
+            # name the bad entry and the registry
+            ap.error(f"--only: unknown bench module(s) "
+                     f"{', '.join(unknown) or '(empty)'}; known modules: "
+                     f"{', '.join(MODULES)}")
     timer = None
     if args.timer == "synthetic":
         from repro.bench import SyntheticTimer

@@ -8,6 +8,7 @@
 | shardmap-pipeline | pipelined runtime (stage ring)  | SPMD + messages | O(1) per step |
 | host-dynamic      | Dask / Spark / Swift-T          | host per task   | O(1) per task |
 | pallas-fused      | (below the floor: megakernel)   | in-kernel grid  | O(1) per GRAPH|
+| auto              | (planner: no one system wins)   | table-driven    | delegated     |
 
 Every backend runs every graph (pattern x kernel x payload x imbalance)
 unchanged, and is validated against the numpy oracle in core.validate.
@@ -15,8 +16,9 @@ The two shard_map backends share the ``repro.dist.collectives`` comm-
 planning layer (ring/halo/allgather modes, ragged-width padding).
 """
 from .base import (Backend, StackedProgramBackend, backend_names,
-                   canonical_backend_spec, get_backend, parse_backend_spec,
-                   register_backend)
+                   backend_option_signature, canonical_backend_spec,
+                   get_backend, parse_backend_spec, register_backend)
+from .auto import AutoBackend
 from .csp import CSPBackend, PlannedSPMDBackend
 from .dataflow import DataflowBackend
 from .host import HostBackend
@@ -28,10 +30,12 @@ __all__ = [
     "Backend",
     "StackedProgramBackend",
     "backend_names",
+    "backend_option_signature",
     "canonical_backend_spec",
     "get_backend",
     "parse_backend_spec",
     "register_backend",
+    "AutoBackend",
     "CSPBackend",
     "DataflowBackend",
     "HostBackend",

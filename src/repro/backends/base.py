@@ -101,6 +101,31 @@ def canonical_backend_spec(spec: str) -> str:
     return f"{name}[{opts}]"
 
 
+def backend_option_signature(name: str) -> Dict[str, object]:
+    """The registered backend's constructor options and their defaults.
+
+    Maps option name -> default value (``inspect.Parameter.empty`` for
+    required options).  This is the *known-options metadata* the spec
+    validator rejects typos against and the tuner
+    (``repro.bench.tuner.enumerate_mode_space``) prunes the legal
+    backend/mode space with — one source of truth, the constructor
+    signature itself.  Returns ``None`` when the constructor takes open
+    ``**kwargs`` (it validates its own options).
+    """
+    if name not in _BACKENDS:
+        raise KeyError(f"unknown backend {name!r}; known: {backend_names()}")
+    init = _BACKENDS[name].__init__
+    if init is object.__init__:
+        return {}
+    params = inspect.signature(init).parameters
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        return None
+    return {n: p.default for n, p in params.items()
+            if n != "self" and p.kind in (
+                inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                inspect.Parameter.KEYWORD_ONLY)}
+
+
 def _check_ctor_kwargs(cls: Type["Backend"], name: str, kwargs: Dict) -> None:
     """Reject unknown constructor options, naming backend and key.
 
@@ -110,17 +135,10 @@ def _check_ctor_kwargs(cls: Type["Backend"], name: str, kwargs: Dict) -> None:
     """
     if not kwargs:
         return
-    init = cls.__init__
-    known: List[str] = []
-    if init is not object.__init__:
-        params = inspect.signature(init).parameters
-        if any(p.kind is inspect.Parameter.VAR_KEYWORD
-               for p in params.values()):
-            return  # the constructor validates its own open kwargs
-        known = [n for n, p in params.items()
-                 if n != "self" and p.kind in (
-                     inspect.Parameter.POSITIONAL_OR_KEYWORD,
-                     inspect.Parameter.KEYWORD_ONLY)]
+    sig = backend_option_signature(name)
+    if sig is None:
+        return  # the constructor validates its own open kwargs
+    known = list(sig)
     for k in kwargs:
         if k not in known:
             raise ValueError(

@@ -46,6 +46,11 @@ from .studies import (StudyPoint, elapsed_s, imbalance_spec,
                       study_timer)
 from .moe import (MoEDispatchSpec, analytic_a2a_bytes, lowered_moe_hlo,
                   moe_dispatch_report)
+from .tuner import (TuningKey, TuningTable, auto_resolve, build_tuning_table,
+                    diff_tuning_tables, enumerate_mode_space, graphs_cutout,
+                    granularity_bucket, load_tuning_table, payload_bucket,
+                    read_tuning_json, spec_cutout, validate_tuning_table,
+                    write_tuning_json)
 from .serve import (ServeCostParams, ServeLoadResult, ServeLoadSpec,
                     TracedRequest, run_engine_load, run_serve_load,
                     serve_artifact, simulate_serve_load, synth_trace,
@@ -95,6 +100,20 @@ __all__ = [
     "analytic_a2a_bytes",
     "lowered_moe_hlo",
     "moe_dispatch_report",
+    "TuningKey",
+    "TuningTable",
+    "auto_resolve",
+    "build_tuning_table",
+    "diff_tuning_tables",
+    "enumerate_mode_space",
+    "granularity_bucket",
+    "graphs_cutout",
+    "load_tuning_table",
+    "payload_bucket",
+    "read_tuning_json",
+    "spec_cutout",
+    "validate_tuning_table",
+    "write_tuning_json",
     "ServeCostParams",
     "ServeLoadResult",
     "ServeLoadSpec",

@@ -10,7 +10,9 @@ never fail.
 
 ``compare_dirs`` matches artifacts by filename across two directories —
 every baseline scenario must still exist and hold its numbers; scenarios
-that are *new* in the current run pass (they have no baseline yet).
+that are *new* in the current run pass (they have no baseline yet) but
+are named in the summary, so a typo'd rename shows up as vanished+new
+instead of silently dropping its baseline coverage.
 
 ``benchmarks/run.py --baseline <dir>`` runs the comparison after a sweep
 and exits nonzero on any regression; CI runs it with the deterministic
@@ -44,9 +46,26 @@ def _canonical_backend(spec: str) -> str:
         return spec
 
 
+class ZeroBaselineError(ValueError):
+    """A baseline point of 0.0 against a nonzero current value.
+
+    There is no finite relative delta to compare against the threshold —
+    comparing ``inf`` (the old behavior) silently turned the point into
+    an unconditional failure with a non-finite number in the report.  A
+    measured point recorded as 0.0 means the artifacts disagree about
+    what was measured (an identity mismatch), consistent with the
+    finiteness guards in ``validate_artifact``; both-zero compares equal.
+    """
+
+
 def _rel_delta(baseline: float, current: float) -> float:
     if baseline == 0:
-        return 0.0 if current == 0 else float("inf")
+        if current == 0:
+            return 0.0
+        raise ZeroBaselineError(
+            f"baseline is 0.0 but current is {current:.4g} — no finite "
+            f"relative delta (zero-baseline points are an identity "
+            f"mismatch, not a perf signal)")
     return (current - baseline) / baseline
 
 
@@ -100,19 +119,31 @@ def _compare_serve(baseline: Dict, current: Dict, rel_threshold: float,
     """serve_load diff: latency percentiles up or rates down = regression."""
     bm, cm = baseline["metrics"], current["metrics"]
     for k in _SERVE_RATE_METRICS:
-        rel = _rel_delta(bm[k], cm[k])  # negative = slower
+        try:
+            rel = _rel_delta(bm[k], cm[k])  # negative = slower
+        except ZeroBaselineError as e:
+            res.regressions.append(f"{k}: {e}")
+            continue
         if -rel > rel_threshold:
             res.regressions.append(
                 f"{k} {bm[k]:.4g} -> {cm[k]:.4g} "
                 f"({rel:+.1%} < -{rel_threshold:.0%})")
     for k in _SERVE_LATENCY_METRICS:
         for q in ("p50", "p95", "p99"):
-            rel = _rel_delta(bm[k][q], cm[k][q])
+            try:
+                rel = _rel_delta(bm[k][q], cm[k][q])
+            except ZeroBaselineError as e:
+                res.regressions.append(f"{k}.{q}: {e}")
+                continue
             if rel > rel_threshold:
                 res.regressions.append(
                     f"{k}.{q} {bm[k][q]:.3e}s -> {cm[k][q]:.3e}s "
                     f"(+{rel:.1%} > {rel_threshold:.0%})")
-    res.note = f"thr{_rel_delta(bm['throughput_tok_s'], cm['throughput_tok_s']):+.1%}"
+    try:
+        thr = _rel_delta(bm["throughput_tok_s"], cm["throughput_tok_s"])
+        res.note = f"thr{thr:+.1%}"
+    except ZeroBaselineError:
+        res.note = ""  # already a regression via the rate loop above
     return res
 
 
@@ -169,11 +200,15 @@ def compare_artifacts(baseline: Dict, current: Dict,
     mb, mc = baseline["metg_s"], current["metg_s"]
     res.metg_baseline, res.metg_current = mb, mc
     if mb is not None and mc is not None:
-        res.metg_rel_delta = _rel_delta(mb, mc)
-        if res.metg_rel_delta > rel_threshold:
-            res.regressions.append(
-                f"METG {mb:.3e}s -> {mc:.3e}s "
-                f"(+{res.metg_rel_delta:.1%} > {rel_threshold:.0%})")
+        try:
+            res.metg_rel_delta = _rel_delta(mb, mc)
+        except ZeroBaselineError as e:
+            res.regressions.append(f"METG: {e}")
+        else:
+            if res.metg_rel_delta > rel_threshold:
+                res.regressions.append(
+                    f"METG {mb:.3e}s -> {mc:.3e}s "
+                    f"(+{res.metg_rel_delta:.1%} > {rel_threshold:.0%})")
     elif mb is not None and mc is None:
         res.regressions.append(
             f"METG no longer crosses the efficiency threshold "
@@ -188,7 +223,11 @@ def compare_artifacts(baseline: Dict, current: Dict,
         if cp is None:
             res.regressions.append(f"sweep point iterations={it} missing")
             continue
-        rel = _rel_delta(bp["wall_time_s"], cp["wall_time_s"])
+        try:
+            rel = _rel_delta(bp["wall_time_s"], cp["wall_time_s"])
+        except ZeroBaselineError as e:
+            res.regressions.append(f"point iterations={it}: {e}")
+            continue
         regressed = rel > rel_threshold
         res.points.append(PointDelta(
             iterations=it, baseline_s=bp["wall_time_s"],
@@ -225,7 +264,11 @@ def compare_dirs(baseline_dir: str, current_dir: str,
 
     A baseline artifact with no current counterpart is a regression (a
     measured scenario silently disappeared); current artifacts without a
-    baseline are new scenarios and pass.  With ``families``, baseline
+    baseline are new scenarios — they pass, but are *reported* in the
+    summary (``"new in current run"``), because a new-looking artifact is
+    also what a typo'd scenario rename produces: the old name trips the
+    vanished-scenario regression and the note names its replacement, so
+    the rename is visible end to end.  With ``families``, baseline
     artifacts of other scenario families are skipped entirely — the
     partial-run (``--only``) case, where the rest of the baseline was
     never remeasured and "missing" means "not run", not "vanished".
@@ -235,7 +278,8 @@ def compare_dirs(baseline_dir: str, current_dir: str,
     if not os.path.isdir(baseline_dir):
         raise ValueError(f"baseline directory {baseline_dir!r} not found")
     results: List[ComparisonResult] = []
-    for fname in bench_json_names(baseline_dir):
+    base_names = set(bench_json_names(baseline_dir))
+    for fname in sorted(base_names):
         if families is not None and scenario_family(fname) not in families:
             continue
         base = read_bench_json(os.path.join(baseline_dir, fname))
@@ -248,6 +292,17 @@ def compare_dirs(baseline_dir: str, current_dir: str,
             continue
         results.append(compare_artifacts(base, read_bench_json(cur_path),
                                          rel_threshold=rel_threshold))
+    if os.path.isdir(current_dir):
+        for fname in bench_json_names(current_dir):
+            if fname in base_names:
+                continue
+            if (families is not None
+                    and scenario_family(fname) not in families):
+                continue
+            results.append(ComparisonResult(
+                scenario=fname,
+                note="new in current run; no baseline yet (commit a "
+                     "snapshot to gate it)"))
     return results
 
 

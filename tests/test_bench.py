@@ -400,6 +400,62 @@ def test_compare_rejects_identity_mismatch_and_missing_points():
     assert any("timer changed" in r for r in res.regressions)
 
 
+def test_compare_zero_baseline_is_identity_mismatch_not_inf():
+    """Bugfix pin: a 0.0 baseline point against a nonzero current used to
+    produce an inf relative delta in the report.  It is an identity
+    mismatch (the artifacts disagree about what was measured) and must be
+    reported as a named error; both-zero compares equal."""
+    from repro.bench import compare_artifacts
+    from repro.bench.compare import ZeroBaselineError, _rel_delta
+
+    with pytest.raises(ZeroBaselineError, match="identity mismatch"):
+        _rel_delta(0.0, 1.0)
+    assert _rel_delta(0.0, 0.0) == 0.0
+    assert _rel_delta(2.0, 1.0) == -0.5
+    # through the artifact differ: the point is a regression with the
+    # named message, never an inf in the summary
+    base = _doc()
+    base["points"][0]["wall_time_s"] = 0.0
+    res = compare_artifacts(base, _doc(), rel_threshold=0.25)
+    assert not res.ok
+    assert any("identity mismatch" in r for r in res.regressions)
+    assert "inf" not in res.summary()
+    # a zeroed METG baseline takes the same path
+    mbase = _doc()
+    mbase["metg_s"] = 0.0
+    res = compare_artifacts(mbase, _doc(), rel_threshold=0.25)
+    assert not res.ok and any("METG" in r for r in res.regressions)
+
+
+def test_compare_dirs_reports_new_in_current_scenarios(tmp_path):
+    """Bugfix pin: a scenario present only in the current run used to be
+    silently invisible in the gate summary.  It is non-fatal (ok=True)
+    but must appear, with the commit-a-snapshot hint."""
+    from repro.bench import compare_dirs, format_report
+
+    base_dir, cur_dir = tmp_path / "base", tmp_path / "cur"
+    spec = ScenarioSpec(name="newgate.old", pattern="trivial", width=4,
+                        height=8)
+    write_bench_json(run_scenario(spec, timer=SyntheticTimer()),
+                     str(base_dir))
+    write_bench_json(run_scenario(spec, timer=SyntheticTimer()),
+                     str(cur_dir))
+    spec2 = ScenarioSpec(name="newgate.fresh", pattern="trivial", width=4,
+                         height=8)
+    write_bench_json(run_scenario(spec2, timer=SyntheticTimer()),
+                     str(cur_dir))
+    results = compare_dirs(str(base_dir), str(cur_dir))
+    assert len(results) == 2 and all(r.ok for r in results)
+    report = format_report(results)
+    assert "new in current run; no baseline yet" in report
+    assert "commit a snapshot" in report
+    # family scoping applies to new-in-current too: a filtered family's
+    # new artifact is not reported
+    results = compare_dirs(str(base_dir), str(cur_dir),
+                           families={"nosuchfamily"})
+    assert not any("new in current" in (r.note or "") for r in results)
+
+
 def test_compare_canonicalizes_backend_spec_key_order():
     """A baseline written with reordered backend-spec options is the SAME
     scenario: the differ must compare canonically, not raw-text — a
