@@ -18,7 +18,7 @@ import glob
 import os
 import sys
 from collections import defaultdict
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "src"))
@@ -26,18 +26,28 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
 MARKER = "## §Tables (generated)"
 
 
-def load_metg_artifacts(artifacts_dir: str) -> List[Dict]:
-    """All schema-valid ``BENCH_*.json`` docs under ``artifacts_dir``."""
+def load_metg_artifacts(artifacts_dir: str) -> Tuple[List[Dict], int]:
+    """``(docs, skipped)``: schema-valid ``BENCH_*.json`` docs under
+    ``artifacts_dir`` plus the count of files that failed validation.
+
+    A corrupt or foreign artifact is not a table row, but silently
+    dropping it makes a backend row vanish from EXPERIMENTS.md with no
+    signal — each skip warns on stderr naming the path and reason, and
+    the count is returned so callers (``run.py --tables``) can surface
+    it next to the spliced-tables line.
+    """
     from repro.bench.artifact import read_bench_json
 
-    docs = []
+    docs: List[Dict] = []
+    skipped = 0
     for path in sorted(glob.glob(os.path.join(artifacts_dir,
                                               "BENCH_*.json"))):
         try:
             docs.append(read_bench_json(path))
-        except ValueError:
-            continue  # corrupt or foreign artifacts are not table rows
-    return docs
+        except ValueError as e:
+            skipped += 1
+            print(f"append_tables: skipping {path}: {e}", file=sys.stderr)
+    return docs, skipped
 
 
 def _case_name(scenario: Dict) -> str:
@@ -115,6 +125,38 @@ def render_serve_summary(docs: List[Dict]) -> str:
     return "\n".join(out)
 
 
+def render_scaling_summary(docs: List[Dict]) -> str:
+    """Markdown weak-scaling table: one row per ``metg_scaling`` series,
+    weak-scaling efficiency ``T(1)/T(n)`` per rank count at the coarsest
+    granularity, plus the finest-granularity efficiency at the top rank
+    count (the contour's floor corner).  Empty string when no
+    ``metg_scaling`` artifacts are present."""
+    series = [d for d in docs if d.get("kind") == "metg_scaling"]
+    if not series:
+        return ""
+    ranks = sorted({c["ranks"] for d in series for c in d["cells"]})
+    out = [
+        "\n### Weak scaling — metg_scaling (fixed work per rank; "
+        "weak-scaling efficiency T(1)/T(n), ideal 1.0)\n",
+        "| backend | " + " | ".join(f"r={n}" for n in ranks)
+        + " | eff@finest (top ranks) |",
+        "|---" * (len(ranks) + 2) + "|",
+    ]
+    for d in sorted(series, key=lambda d: d["scenario"]["name"]):
+        cells = {c["ranks"]: c for c in d["cells"]}
+        row = [d["scenario"]["backend"]]
+        for n in ranks:
+            c = cells.get(n)
+            row.append("—" if c is None else f"{c['weak_efficiency']:.3f}")
+        top = cells[max(cells)]
+        fine = min(top["points"], key=lambda p: p["iterations"])
+        row.append(f"{fine['weak_efficiency']:.3f} "
+                   f"@ {fine['granularity_s'] * 1e6:.2f} µs")
+        out.append("| " + " | ".join(row) + " |")
+    out.append("")
+    return "\n".join(out)
+
+
 def render_tuning_summary(tuning_dir: str = "benchmarks/tuning") -> str:
     """Markdown table of the committed planner winners: one row per
     tuning key, grouped by family (what ``get_backend("auto")``
@@ -166,21 +208,25 @@ def _splice(md_path: str, body: str) -> str:
 
 def append_metg_tables(artifacts_dir: str,
                        md_path: str = "EXPERIMENTS.md",
-                       tuning_dir: str = None) -> str:
-    """Aggregate ``BENCH_*.json`` under ``artifacts_dir`` into the METG
-    summary (plus the committed auto-backend tuning winners) and splice
-    it into ``md_path``; returns the path written."""
-    docs = load_metg_artifacts(artifacts_dir)
+                       tuning_dir: str = None) -> Tuple[str, int]:
+    """Aggregate ``BENCH_*.json`` under ``artifacts_dir`` into the METG,
+    serve-load and weak-scaling summaries (plus the committed
+    auto-backend tuning winners) and splice them into ``md_path``;
+    returns ``(path_written, artifacts_skipped)``."""
+    docs, skipped = load_metg_artifacts(artifacts_dir)
     if not docs:
         raise ValueError(
-            f"no valid BENCH_*.json artifacts in {artifacts_dir!r}")
+            f"no valid BENCH_*.json artifacts in {artifacts_dir!r}"
+            + (f" ({skipped} skipped as invalid)" if skipped else ""))
     if tuning_dir is None:
         tuning_dir = os.path.join(
             os.path.dirname(os.path.abspath(__file__)),
             "benchmarks", "tuning")
-    return _splice(md_path,
+    path = _splice(md_path,
                    render_metg_summary(docs) + render_serve_summary(docs)
+                   + render_scaling_summary(docs)
                    + render_tuning_summary(tuning_dir) + "\n")
+    return path, skipped
 
 
 def append_dryrun_tables(dryrun_json: str = "results/dryrun.json",
@@ -231,7 +277,9 @@ def main(argv=None) -> None:
     if not args.artifacts and not args.dryrun_json:
         ap.error("nothing to do: pass --artifacts and/or --dryrun-json")
     if args.artifacts:
-        print(f"tables appended: {append_metg_tables(args.artifacts, args.out)}")
+        path, skipped = append_metg_tables(args.artifacts, args.out)
+        note = f" ({skipped} invalid artifact(s) skipped)" if skipped else ""
+        print(f"tables appended: {path}{note}")
     if args.dryrun_json:
         print(f"tables appended: "
               f"{append_dryrun_tables(args.dryrun_json, args.out)}")

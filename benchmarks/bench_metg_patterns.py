@@ -23,8 +23,13 @@ CASES = [
 
 def run(ctx: BenchContext = None) -> List[Row]:
     ctx = ctx or BenchContext()
+    backends = [b for b in backend_names() if ctx.wants_backend(b)]
+    if not backends:
+        raise ValueError(
+            f"--backends filter {ctx.backends!r} matches none of the "
+            f"registered backends {backend_names()}")
     rows: List[Row] = []
-    for be in backend_names():
+    for be in backends:
         hi = 1024 if be == "host-dynamic" else 4096
         for case, kw, ngraphs in CASES:
             pattern = "nearest" if case == "nearest_x4" else case

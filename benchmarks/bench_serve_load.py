@@ -35,7 +35,8 @@ def specs() -> List[ServeLoadSpec]:
     ]
 
 
-def run(ctx: BenchContext) -> List[Row]:
+def run(ctx: BenchContext = None) -> List[Row]:
+    ctx = ctx or BenchContext()
     rows = []
     for spec in specs():
         m = ctx.run_serve(spec).metrics

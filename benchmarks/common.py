@@ -44,6 +44,30 @@ class BenchContext:
     artifacts_dir: Optional[str] = None
     timer: Optional[Timer] = None  # None -> wall clock from sweep controls
     written: List[str] = dataclasses.field(default_factory=list)
+    # None -> every backend a module defines; otherwise an explicit spec
+    # filter (``--backends``) matched canonically via ``wants_backend``
+    backends: Optional[List[str]] = None
+
+    def wants_backend(self, spec: str) -> bool:
+        """Whether ``spec`` survives the ``--backends`` filter.
+
+        Matching is canonical (option order inside the spec string is not
+        identity), falling back to raw string equality for specs the
+        parser rejects — a typo'd filter entry should match nothing, not
+        crash the registry run.
+        """
+        if self.backends is None:
+            return True
+        from repro.backends.base import canonical_backend_spec
+
+        def canon(s: str) -> str:
+            try:
+                return canonical_backend_spec(s)
+            except ValueError:
+                return s
+
+        want = {canon(b) for b in self.backends}
+        return canon(spec) in want
 
     def run(self, spec: ScenarioSpec, peak_rate: Optional[float] = None,
             timer: Optional[Timer] = None) -> ScenarioResult:
@@ -88,6 +112,30 @@ class BenchContext:
         result = run_serve_load(spec, timer=self.timer, **kw)
         if self.artifacts_dir:
             self.written.append(write_serve_json(result, self.artifacts_dir))
+        return result
+
+    def run_scaling(self, spec, **kw):
+        """Run one weak-scaling rank sweep (smoke applied), record artifact.
+
+        Each rank count of the sweep executes in a relaunched subprocess
+        with the device count pinned (``repro.bench.scaling``); the
+        context timer is serialized to the children, so ``--timer
+        synthetic`` yields the deterministic machine-independent artifact
+        the CI gate runs on.  ``kw`` forwards to ``run_scaling`` (e.g.
+        ``python=`` for tests).
+        """
+        from repro.bench.scaling import run_scaling, write_scaling_json
+
+        if self.artifacts_dir:
+            path = artifact_path(spec.slug, self.artifacts_dir)
+            if path in self.written:
+                raise ValueError(
+                    f"scenario {spec.name!r} would overwrite an earlier "
+                    f"artifact at {path}; pick names with distinct slugs")
+        result = run_scaling(spec, timer=self.timer, smoke=self.smoke, **kw)
+        if self.artifacts_dir:
+            self.written.append(
+                write_scaling_json(result, self.artifacts_dir))
         return result
 
 

@@ -10,7 +10,9 @@ the paper:
   bench_metg_deps        Figure 10 (METG vs deps/task)
   bench_overlap          Figure 11 (communication overlap)
   bench_imbalance        Figure 12 (load imbalance)
-  bench_scaling          Figures 4/5 (scaling contour = METG curve)
+  bench_metg_scaling     Figures 4/5 (§V-D/E): weak-scaling efficiency,
+                         rank sweep {1,2,4,8} via per-rank subprocess
+                         relaunch with the JAX device count pinned
   bench_metg_validation  Figure 14 / Table 6 (METG predicts the limit)
   bench_model_step       §V-C applied to this framework's own dispatch
   bench_moe_dispatch     MoE dispatch comm volume (SP-aware EP vs
@@ -58,7 +60,7 @@ MODULES = [
     "bench_metg_deps",
     "bench_overlap",
     "bench_imbalance",
-    "bench_scaling",
+    "bench_metg_scaling",
     "bench_metg_validation",
     "bench_model_step",
     "bench_moe_dispatch",
@@ -121,6 +123,12 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated bench module names")
+    ap.add_argument("--backends", default=None,
+                    help="comma-separated backend spec filter for the "
+                         "modules that honor it (matched canonically; a "
+                         "module whose filtered backend set is empty "
+                         "raises, so a typo'd spec cannot green-light a "
+                         "zero-cell run)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweeps for CI: few points, one repeat")
     ap.add_argument("--artifacts", default="results/bench",
@@ -187,9 +195,15 @@ def main(argv=None) -> None:
         from repro.bench import SyntheticTimer
 
         timer = SyntheticTimer()
+    backends = None
+    if args.backends:
+        backends = [b.strip() for b in args.backends.split(",") if b.strip()]
+        if not backends:
+            ap.error("--backends: empty filter")
     ctx = BenchContext(smoke=args.smoke,
                        artifacts_dir=args.artifacts or None,
-                       timer=timer)
+                       timer=timer,
+                       backends=backends)
 
     print("name,us_per_call,derived")
     failures = []
@@ -208,15 +222,23 @@ def main(argv=None) -> None:
     for path in ctx.written:
         print(f"artifact,0,{path}", flush=True)
 
-    if args.tables:
+    if args.tables and failures:
+        # a red run wrote only part of the artifact set; regenerating the
+        # committed tables from it would silently drop the failed
+        # families' rows
+        print(f"run.py: skipping --tables splice into {args.tables_file}: "
+              f"{len(failures)} bench module(s) failed and the artifact "
+              f"set is partial", file=sys.stderr)
+    elif args.tables:
         root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         if root not in sys.path:
             sys.path.insert(0, root)
         import append_tables
 
-        print(f"tables,0,"
-              f"{append_tables.append_metg_tables(args.artifacts, args.tables_file)}",
-              flush=True)
+        tpath, skipped = append_tables.append_metg_tables(
+            args.artifacts, args.tables_file)
+        note = f" ({skipped} invalid artifact(s) skipped)" if skipped else ""
+        print(f"tables,0,{tpath}{note}", flush=True)
 
     regressed = False
     if args.baseline:

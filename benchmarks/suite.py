@@ -1,0 +1,120 @@
+"""Campaign CLI: run a declarative TOML benchmark suite.
+
+``python -m benchmarks.suite benchmarks/suites/paper.toml --smoke
+--timer``-free: the timer lives in the TOML (suite default + per-cell
+override).  Each cell is one ``python -m benchmarks.run --only <family>``
+subprocess (``repro.bench.suite``), so the artifacts are the ones a
+serial run writes — bit-identical on the synthetic timer, which the
+per-cell ``rollouts`` byte-comparison enforces.
+
+Exit codes: 2 = the suite file is invalid (TOML syntax, unknown family
+or backend — nothing was run); 1 = a cell failed, a rollout mismatched,
+or the ``--baseline`` gate found a regression; 0 = clean campaign.
+
+``--tables`` splices the aggregated summary into EXPERIMENTS.md only on
+a fully green campaign (a partial artifact set must not regenerate the
+committed tables — same rule as ``run.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> None:
+    from repro.bench.compare import (bench_json_names, compare_dirs,
+                                     format_report, scenario_family)
+    from repro.bench.suite import load_suite, run_suite, validate_suite
+
+    from .run import MODULES
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("suite", help="TOML suite file (benchmarks/suites/)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweeps for CI (forwarded to every cell)")
+    ap.add_argument("--artifacts", default="results/suite",
+                    help="directory for the campaign's BENCH_*.json")
+    ap.add_argument("--parallel", type=int, default=None,
+                    help="override the suite's parallel cell count")
+    ap.add_argument("--baseline", default=None,
+                    help="directory of committed BENCH_*.json to diff the "
+                         "campaign against; exit nonzero on regression")
+    ap.add_argument("--baseline-threshold", type=float, default=0.25,
+                    help="relative slowdown tolerated by --baseline")
+    ap.add_argument("--tables", action="store_true",
+                    help="aggregate the campaign's artifacts into the "
+                         "paper-style tables (append_tables.py)")
+    ap.add_argument("--tables-file", default="EXPERIMENTS.md",
+                    help="markdown file --tables appends to")
+    args = ap.parse_args(argv)
+
+    try:
+        suite = load_suite(args.suite)
+        from repro.backends import backend_names
+
+        validate_suite(suite, known_families=MODULES,
+                       known_backends=backend_names())
+    except (OSError, ValueError) as e:
+        print(f"suite: {e}", file=sys.stderr)
+        sys.exit(2)
+
+    result = run_suite(suite, args.artifacts, smoke=args.smoke,
+                       parallel=args.parallel)
+    # the cells' CSV output is part of the campaign record — replay it
+    # serially (one block per cell) so `suite ... | tee` is as greppable
+    # as a serial run
+    print("name,us_per_call,derived")
+    for run in result.runs:
+        for line in run.stdout.splitlines():
+            if line and line != "name,us_per_call,derived":
+                print(line)
+    for label, detail in result.failures:
+        print(f"suite,0,FAILED {label}: {detail.splitlines()[-1] if detail else ''}",
+              flush=True)
+        if detail:
+            print(f"suite: cell {label} failed:\n{detail}", file=sys.stderr)
+    for line in result.summary().splitlines():
+        print(f"suite,0,{line}", flush=True)
+
+    if args.tables and not result.ok:
+        print(f"suite: skipping --tables splice into {args.tables_file}: "
+              f"the campaign is red and the artifact set is partial",
+              file=sys.stderr)
+    elif args.tables:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        if root not in sys.path:
+            sys.path.insert(0, root)
+        import append_tables
+
+        tpath, skipped = append_tables.append_metg_tables(
+            args.artifacts, args.tables_file)
+        note = f" ({skipped} invalid artifact(s) skipped)" if skipped else ""
+        print(f"tables,0,{tpath}{note}", flush=True)
+
+    regressed = False
+    if args.baseline:
+        # gate the scenario families this campaign actually produced;
+        # baseline families outside the suite were not run, and "missing"
+        # would misread as "vanished" (same scoping as run.py --only)
+        fams = {scenario_family(f)
+                for f in bench_json_names(result.out_dir)}
+        skipped_fams = sorted({scenario_family(f)
+                               for f in bench_json_names(args.baseline)
+                               if scenario_family(f) not in fams})
+        if skipped_fams:
+            print(f"compare,0,skipping baseline families outside this "
+                  f"campaign: {skipped_fams}", flush=True)
+        results = compare_dirs(args.baseline, result.out_dir,
+                               rel_threshold=args.baseline_threshold,
+                               families=fams)
+        for line in format_report(results).splitlines():
+            print(f"compare,0,{line}", flush=True)
+        regressed = any(not r.ok for r in results)
+
+    if not result.ok or regressed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

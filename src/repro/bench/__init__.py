@@ -20,6 +20,12 @@
                  open-loop serving traces against the continuous-batching
                  engine (real wall clock) or its discrete-event cost
                  model (synthetic), TTFT/TPOT/goodput percentiles
+- ``scaling``  — the ``metg_scaling`` weak-scaling family (paper §V-D/E):
+                 fixed work per rank, rank sweep via subprocess relaunch
+                 with the JAX device count pinned
+- ``suite``    — the declarative campaign orchestrator: a TOML file of
+                 families x backends x repeats executed as concurrent
+                 ``benchmarks.run`` subprocesses (``benchmarks/suite.py``)
 
 ``benchmarks/*.py`` are thin wrappers over this package; multi-graph
 scenarios (``ngraphs >= 2``) execute concurrently through
@@ -55,6 +61,11 @@ from .serve import (ServeCostParams, ServeLoadResult, ServeLoadSpec,
                     TracedRequest, run_engine_load, run_serve_load,
                     serve_artifact, simulate_serve_load, synth_trace,
                     write_serve_json)
+from .scaling import (RANKS, SCALING_BACKENDS, ScalingResult, ScalingSpec,
+                      rank_env, run_scaling, scaling_artifact,
+                      write_scaling_json)
+from .suite import (Suite, SuiteCell, SuiteResult, load_suite, parse_suite,
+                    run_suite, validate_suite)
 
 __all__ = [
     "METGResult",
@@ -124,4 +135,19 @@ __all__ = [
     "simulate_serve_load",
     "synth_trace",
     "write_serve_json",
+    "RANKS",
+    "SCALING_BACKENDS",
+    "ScalingResult",
+    "ScalingSpec",
+    "rank_env",
+    "run_scaling",
+    "scaling_artifact",
+    "write_scaling_json",
+    "Suite",
+    "SuiteCell",
+    "SuiteResult",
+    "load_suite",
+    "parse_suite",
+    "run_suite",
+    "validate_suite",
 ]

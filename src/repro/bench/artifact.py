@@ -72,6 +72,35 @@ _SERVE_SCENARIO_FIELDS = {
 }
 _SERVE_PCT_KEYS = ("p50", "p95", "p99", "mean")
 _SERVE_PCT_METRICS = ("ttft_s", "tpot_s", "latency_s")
+
+# --- kind="metg_scaling" (repro.bench.scaling): weak-scaling rank sweep ---
+_SCALING_SCENARIO_FIELDS = {
+    "name": str,
+    "backend": str,
+    "pattern": str,
+    "kernel": str,
+    "width_per_rank": int,
+    "height": int,
+    "output_bytes": int,
+    "ranks": list,
+    "sweep": dict,
+}
+_SCALING_CELL_FIELDS = {
+    "ranks": int,
+    "width": int,
+    "devices": int,
+    "elapsed_s": (int, float),
+    "granularity_s": (int, float),
+    "weak_efficiency": (int, float),
+}
+_SCALING_POINT_FIELDS = {
+    "iterations": int,
+    "num_tasks": int,
+    "wall_time_s": (int, float),
+    "granularity_s": (int, float),
+    "efficiency": (int, float),
+    "weak_efficiency": (int, float),
+}
 _SERVE_SCALAR_METRICS = {
     "throughput_tok_s": (int, float),
     "goodput_rps": (int, float),
@@ -153,7 +182,7 @@ def validate_artifact(doc: Dict) -> Dict:
     need(isinstance(doc, dict), "not an object")
     need(doc.get("schema") == SCHEMA_VERSION,
          f"schema must be {SCHEMA_VERSION}, got {doc.get('schema')!r}")
-    need(doc.get("kind") in ("metg_sweep", "serve_load"),
+    need(doc.get("kind") in ("metg_sweep", "serve_load", "metg_scaling"),
          f"unknown kind {doc.get('kind')!r}")
     # any non-empty name is valid: Timer is an open protocol (custom
     # timers must not be rejected at the artifact layer)
@@ -162,6 +191,8 @@ def validate_artifact(doc: Dict) -> Dict:
     need(isinstance(doc.get("timer_config"), dict), "timer_config")
     if doc["kind"] == "serve_load":
         return _validate_serve_load(doc, need)
+    if doc["kind"] == "metg_scaling":
+        return _validate_metg_scaling(doc, need)
     need(_typed(doc.get("threshold"), (int, float)), "threshold")
     need(_typed(doc.get("peak_rate"), (int, float)), "peak_rate")
     need("metg_s" in doc, "metg_s missing (null means no crossing)")
@@ -209,6 +240,47 @@ def _validate_serve_load(doc: Dict, need) -> Dict:
                  f"metrics.{k}.{q} must be a number")
     for k, t in _SERVE_SCALAR_METRICS.items():
         need(_typed(m.get(k), t), f"metrics.{k} must be {t}")
+    return doc
+
+
+def _validate_metg_scaling(doc: Dict, need) -> Dict:
+    """Schema for ``kind="metg_scaling"`` (see ``repro.bench.scaling``)."""
+    sc = doc.get("scenario")
+    need(isinstance(sc, dict), "scenario missing")
+    for k, t in _SCALING_SCENARIO_FIELDS.items():
+        if t is str:
+            need(isinstance(sc.get(k), str) and sc.get(k),
+                 f"scenario.{k} must be a non-empty string")
+        elif t in (list, dict):
+            need(isinstance(sc.get(k), t), f"scenario.{k} must be {t}")
+        else:
+            need(_typed(sc.get(k), t), f"scenario.{k} must be {t}")
+    ranks = sc["ranks"]
+    need(ranks and all(_typed(n, int) and n >= 1 for n in ranks),
+         "scenario.ranks must be a non-empty list of rank counts >= 1")
+    need(list(ranks) == sorted(set(ranks)),
+         f"scenario.ranks must be strictly ascending, got {ranks}")
+    need(ranks[0] == 1,
+         "scenario.ranks must start at 1 (the weak-scaling reference)")
+    cells = doc.get("cells")
+    need(isinstance(cells, list) and cells, "cells must be a non-empty list")
+    need([c.get("ranks") for c in cells if isinstance(c, dict)] == list(ranks),
+         "cells must cover scenario.ranks exactly, in order")
+    for n, c in enumerate(cells):
+        need(isinstance(c, dict), f"cells[{n}] not an object")
+        for k, t in _SCALING_CELL_FIELDS.items():
+            need(_typed(c.get(k), t), f"cells[{n}].{k} must be {t}")
+        need(c["width"] == sc["width_per_rank"] * c["ranks"],
+             f"cells[{n}].width must be width_per_rank * ranks "
+             f"(fixed work per rank), got {c['width']}")
+        pts = c.get("points")
+        need(isinstance(pts, list) and pts,
+             f"cells[{n}].points must be a non-empty list")
+        for m, p in enumerate(pts):
+            need(isinstance(p, dict), f"cells[{n}].points[{m}] not an object")
+            for k, t in _SCALING_POINT_FIELDS.items():
+                need(_typed(p.get(k), t),
+                     f"cells[{n}].points[{m}].{k} must be {t}")
     return doc
 
 

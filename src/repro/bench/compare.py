@@ -147,6 +147,67 @@ def _compare_serve(baseline: Dict, current: Dict, rel_threshold: float,
     return res
 
 
+# metg_scaling identity: the rank sweep's shape axes (a changed rank
+# list or per-rank width is a different experiment, not a perf delta)
+_SCALING_IDENTITY = ("name", "backend", "pattern", "kernel",
+                     "width_per_rank", "height", "output_bytes", "ranks")
+
+
+def _compare_scaling(baseline: Dict, current: Dict, rel_threshold: float,
+                     res: ComparisonResult) -> ComparisonResult:
+    """metg_scaling diff: per-rank elapsed up or weak-scaling efficiency
+    down beyond threshold = regression; a vanished rank cell regresses."""
+    cur_cells = {c["ranks"]: c for c in current["cells"]}
+    for bc in baseline["cells"]:
+        n = bc["ranks"]
+        cc = cur_cells.get(n)
+        if cc is None:
+            res.regressions.append(f"rank cell ranks={n} missing")
+            continue
+        try:
+            rel = _rel_delta(bc["elapsed_s"], cc["elapsed_s"])
+        except ZeroBaselineError as e:
+            res.regressions.append(f"ranks={n} elapsed: {e}")
+            continue
+        if rel > rel_threshold:
+            res.regressions.append(
+                f"ranks={n} elapsed {bc['elapsed_s']:.3e}s -> "
+                f"{cc['elapsed_s']:.3e}s (+{rel:.1%} > {rel_threshold:.0%})")
+        try:
+            eff = _rel_delta(bc["weak_efficiency"], cc["weak_efficiency"])
+        except ZeroBaselineError as e:
+            res.regressions.append(f"ranks={n} weak_efficiency: {e}")
+            continue
+        if -eff > rel_threshold:
+            res.regressions.append(
+                f"ranks={n} weak_efficiency {bc['weak_efficiency']:.3f} -> "
+                f"{cc['weak_efficiency']:.3f} "
+                f"({eff:+.1%} < -{rel_threshold:.0%})")
+        for bp in bc["points"]:
+            it = bp["iterations"]
+            cp = next((p for p in cc["points"]
+                       if p["iterations"] == it), None)
+            if cp is None:
+                res.regressions.append(
+                    f"ranks={n} sweep point iterations={it} missing")
+                continue
+            try:
+                prel = _rel_delta(bp["wall_time_s"], cp["wall_time_s"])
+            except ZeroBaselineError as e:
+                res.regressions.append(f"ranks={n} iterations={it}: {e}")
+                continue
+            if prel > rel_threshold:
+                res.regressions.append(
+                    f"ranks={n} iterations={it}: {bp['wall_time_s']:.3e}s "
+                    f"-> {cp['wall_time_s']:.3e}s "
+                    f"(+{prel:.1%} > {rel_threshold:.0%})")
+    top = max(c["ranks"] for c in baseline["cells"])
+    cc = cur_cells.get(top)
+    if cc is not None and res.ok:
+        res.note = f"eff@r{top}={cc['weak_efficiency']:.3f}"
+    return res
+
+
 def compare_artifacts(baseline: Dict, current: Dict,
                       rel_threshold: float = DEFAULT_THRESHOLD,
                       ) -> ComparisonResult:
@@ -162,6 +223,22 @@ def compare_artifacts(baseline: Dict, current: Dict,
             f"kind changed: baseline {bk!r} vs current {ck!r} "
             f"(artifacts are not comparable)")
         return res
+    if bk == "metg_scaling":
+        for key in _SCALING_IDENTITY:
+            b, c = baseline["scenario"][key], current["scenario"][key]
+            if key == "backend":
+                b, c = _canonical_backend(b), _canonical_backend(c)
+            if b != c:
+                res.regressions.append(
+                    f"scenario.{key} changed: baseline {b!r} vs current {c!r}")
+        bt, ct = baseline["timer"], current["timer"]
+        if bt != ct:
+            res.regressions.append(
+                f"timer changed: baseline {bt!r} vs current {ct!r} "
+                f"(times are not comparable)")
+        if res.regressions:
+            return res
+        return _compare_scaling(baseline, current, rel_threshold, res)
     if bk == "serve_load":
         for key in _SERVE_IDENTITY:
             b, c = baseline["scenario"][key], current["scenario"][key]

@@ -26,7 +26,7 @@ import dataclasses
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Protocol, Sequence, runtime_checkable
+from typing import Dict, List, Protocol, Sequence, Tuple, runtime_checkable
 
 from ..core.graph import TaskGraph
 
@@ -85,6 +85,26 @@ def backend_dispatch_model(backend_name: str) -> str:
     if cls is None:
         return "per-task"
     return getattr(cls, "dispatch_model", "per-task")
+
+
+def backend_comm_hints(backend_name: str) -> Tuple[bool, bool]:
+    """``(onesided, overlap)`` for a backend spec, resolved by name only.
+
+    The multi-rank synthetic model (``SyntheticTimer.ranks > 1``) needs
+    the spec's communication mode without instantiating the backend —
+    the rank sweep runs in relaunched subprocesses and the charged model
+    must be a pure function of the spec string, never of the runtime's
+    device count.  Malformed specs resolve to blocking two-sided (the
+    conservative model), mirroring ``backend_dispatch_model``'s lenient
+    fallback.
+    """
+    try:
+        from ..backends.base import parse_backend_spec
+
+        _, kw = parse_backend_spec(backend_name)
+    except Exception:
+        return False, False
+    return kw.get("comm") == "onesided", kw.get("comm_overlap") is True
 
 
 def pick_sample(samples: Sequence[float], percentile: float) -> float:
@@ -174,6 +194,26 @@ class SyntheticTimer:
     path still never touches a backend.  With the default constants the
     fused METG floor sits ~50x below the per-task floor, which is the
     undercut the committed ``BENCH_metg.pallas-fused.*`` baselines pin.
+
+    ``ranks >= 1``
+        The deterministic *rank-count* model behind the ``metg_scaling``
+        weak-scaling family (``repro.bench.scaling``); 0 (the default)
+        leaves it off.  Columns are owned in contiguous static blocks
+        (``core.schedule.static_owners``, matching the ``CommPlan``
+        shard layout), each wavefront's compute is the slowest rank's
+        block, and only *cross-rank* dependencies pay the per-message
+        term (intra-rank payloads are local reads) — at ``ranks=1``
+        everything is local, so the weak-scaling reference ``T(1)`` is
+        communication-free by construction, the same model family the
+        ``n``-rank cells are charged (never the single-rank all-deps
+        comm model above, which would inflate the reference).  Comm-mode
+        hints resolve by spec string alone (``backend_comm_hints``) —
+        never by instantiation — so the charged wall time is a pure
+        function of ``(graph, ranks, spec)`` and the committed
+        rank-{1,2,4,8} baselines are machine- and device-count-
+        independent.  Per-launch backends divide their task term by
+        ``ranks`` instead (one persistent kernel per rank, no message
+        cost in the model — the documented idealization).
     """
 
     overhead_per_task: float = 20e-6
@@ -184,6 +224,7 @@ class SyntheticTimer:
     workers: int = 1
     overhead_per_launch: float = 100e-6
     fused_overhead_per_task: float = 400e-9
+    ranks: int = 0  # 0 = rank model off; >= 1 charges the scaling model
     name: str = field(default="synthetic", init=False)
     _backends: Dict[str, object] = field(default_factory=dict, repr=False)
 
@@ -211,6 +252,30 @@ class SyntheticTimer:
             return 0.0
         return int(g.dependence_matrices().sum()) * per_dep
 
+    def _ranked_seconds(self, g: TaskGraph, onesided: bool,
+                        overlap: bool) -> float:
+        """Multi-rank weak-scaling model: block-owned compute, cross-rank
+        messages only (see the ``ranks > 1`` section of the class doc)."""
+        import numpy as np
+
+        from ..core.schedule import static_owners, wavefront_makespan
+
+        compute = 0.0
+        for t in range(g.height):
+            costs = [self.overhead_per_task
+                     + g.task_iterations(t, i) * self.seconds_per_iteration
+                     for i in range(g.width)]
+            compute += wavefront_makespan(costs, self.ranks, "static")
+        owners = static_owners(g.width, self.ranks)
+        cross = (g.dependence_matrices()
+                 & (owners[None, :, None] != owners[None, None, :]))
+        per_dep = (self.seconds_per_dependency
+                   + g.output_bytes * self.seconds_per_byte)
+        if not onesided:
+            per_dep += self.seconds_per_rendezvous
+        comm = int(np.asarray(cross).sum()) * max(per_dep, 0.0)
+        return max(compute, comm) if (overlap or onesided) else compute + comm
+
     def measure(self, backend_name: str, graphs: Sequence[TaskGraph]) -> float:
         # "auto" is the planner, not a cost model: resolve it to the
         # tuning table's winner first (a pure lookup — tuner.auto_resolve
@@ -222,11 +287,17 @@ class SyntheticTimer:
         backend_name = auto_resolve(backend_name, graphs)
         if backend_dispatch_model(backend_name) == "per-launch":
             # one launch for the whole batch (the stacked grid covers all
-            # graphs); dependencies are in-kernel refs, so no comm term
+            # graphs); dependencies are in-kernel refs, so no comm term.
+            # ranks > 1 runs one persistent kernel per rank, so the task
+            # term is divided across the rank count
             return self.overhead_per_launch + sum(
                 g.num_tasks * self.fused_overhead_per_task
                 + g.total_iterations() * self.seconds_per_iteration
-                for g in graphs)
+                for g in graphs) / max(1, self.ranks)
+        if self.ranks >= 1:
+            onesided, overlap = backend_comm_hints(backend_name)
+            return sum(self._ranked_seconds(g, onesided, overlap)
+                       for g in graphs)
         policy, overlap, workers = "serial", False, self.workers
         onesided = False
         if (self.workers > 1 or self.seconds_per_byte > 0

@@ -536,26 +536,26 @@ def test_compare_dirs_and_run_baseline_gate(tmp_path):
     assert all(r.ok for r in compare_dirs(str(base_dir), str(cur_dir)))
     # the CLI gate: same sweep vs itself passes...
     art = tmp_path / "cli"
-    main(["--smoke", "--timer", "synthetic", "--only", "bench_scaling",
+    main(["--smoke", "--timer", "synthetic", "--only", "bench_peak",
           "--artifacts", str(art)])
-    main(["--smoke", "--timer", "synthetic", "--only", "bench_scaling",
+    main(["--smoke", "--timer", "synthetic", "--only", "bench_peak",
           "--artifacts", str(tmp_path / "cli2"),
           "--baseline", str(art)])
     # ...and exits nonzero when a baseline artifact of a family this run
     # measured has no counterpart (a scenario vanished from the module)
     (tmp_path / "cli2" / os.listdir(art)[0]).rename(
-        tmp_path / "cli2" / "BENCH_scaling.renamed-away.json")
+        tmp_path / "cli2" / "BENCH_peak.renamed-away.json")
     with pytest.raises(SystemExit) as exc:
-        main(["--smoke", "--timer", "synthetic", "--only", "bench_scaling",
+        main(["--smoke", "--timer", "synthetic", "--only", "bench_peak",
               "--artifacts", str(tmp_path / "cli3"),
               "--baseline", str(tmp_path / "cli2")])
     assert exc.value.code == 1
     # a partial run is NOT failed by baselines of families it never
-    # remeasured (e.g. --only bench_scaling vs the full committed
+    # remeasured (e.g. --only bench_peak vs the full committed
     # snapshot) — "missing" there means "not run", not "vanished"
-    (tmp_path / "cli2" / "BENCH_scaling.renamed-away.json").rename(
+    (tmp_path / "cli2" / "BENCH_peak.renamed-away.json").rename(
         tmp_path / "cli2" / "BENCH_otherfamily.cell.json")
-    main(["--smoke", "--timer", "synthetic", "--only", "bench_scaling",
+    main(["--smoke", "--timer", "synthetic", "--only", "bench_peak",
           "--artifacts", str(tmp_path / "cli4"),
           "--baseline", str(tmp_path / "cli2")])
 
@@ -985,7 +985,7 @@ def test_benchmarks_smoke_emits_valid_artifacts(tmp_path, capsys):
     BENCH_*.json (the acceptance contract for the CI artifact upload)."""
     from benchmarks.run import main
 
-    main(["--smoke", "--only", "bench_scaling",
+    main(["--smoke", "--only", "bench_peak",
           "--artifacts", str(tmp_path)])
     out = capsys.readouterr().out
     assert "name,us_per_call,derived" in out

@@ -348,10 +348,10 @@ def test_run_only_rejects_unknown_modules(capsys):
 def test_run_only_valid_subset_still_runs(tmp_path, capsys):
     from benchmarks.run import main
 
-    main(["--smoke", "--timer", "synthetic", "--only", "bench_scaling",
+    main(["--smoke", "--timer", "synthetic", "--only", "bench_peak",
           "--artifacts", str(tmp_path)])
     out = capsys.readouterr().out
-    assert "bench_scaling.elapsed" in out
+    assert "bench_peak.elapsed" in out
     assert any(f.startswith("BENCH_") for f in os.listdir(tmp_path))
 
 
@@ -386,5 +386,5 @@ def test_tune_cli_round_trip_and_gate(tmp_path, capsys):
         main(["--tune-baseline", path])
     assert exc.value.code == 2
     with pytest.raises(SystemExit) as exc:
-        main(["--tune", "--only", "bench_scaling"])
+        main(["--tune", "--only", "bench_peak"])
     assert exc.value.code == 2
